@@ -1,0 +1,110 @@
+"""Paper Tables 1-3 analog: adapter quality, LoRA vs the 5 SHiRA masks
+(+ DoRA, SHiRA-DoRA).
+
+The container has no LLaMA/SD checkpoints or benchmark datasets, so the
+*mechanism* is measured on a learnable synthetic task: each method finetunes
+the same frozen base model; we report final loss (lower = better), trainable
+params %, and %C (fraction of base weights changed in fused/deployed form —
+the paper's rapid-switching figure of merit).
+
+Also runs the alpha-sweep of App. G (--alpha-sweep).
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.configs import AdapterConfig, RunConfig, TrainConfig, get_smoke_config
+from repro.configs.base import ShapeSpec
+from repro.data import TaskSpec, batch_iterator, make_batch
+from repro.models import lm
+from repro.runtime import Trainer
+from repro.runtime.trainer import TrainerConfig
+
+SHAPE = ShapeSpec("bench", 64, 8, "train")
+ARCH = "starcoder2-7b"
+STEPS = 50
+TASK = TaskSpec(task_id=5)
+
+METHODS = [
+    ("lora", AdapterConfig(kind="lora", rank=8)),
+    ("dora", AdapterConfig(kind="dora", rank=8)),
+    ("shira-struct", AdapterConfig(kind="shira", mask="struct", sparsity=0.98)),
+    ("shira-rand", AdapterConfig(kind="shira", mask="rand", sparsity=0.98)),
+    ("shira-wm", AdapterConfig(kind="shira", mask="wm", sparsity=0.98)),
+    ("shira-grad", AdapterConfig(kind="shira", mask="grad", sparsity=0.98)),
+    ("shira-snip", AdapterConfig(kind="shira", mask="snip", sparsity=0.98)),
+    ("shira-dora", AdapterConfig(kind="shira-dora", mask="wm",
+                                 sparsity=0.98, rank=8)),
+]
+
+
+def calib_grads(cfg, params):
+    batch = {k: jnp.asarray(v) for k, v in
+             make_batch(cfg, SHAPE, seed=1, step=0, task=TASK).items()}
+    return jax.grad(lambda p: lm.train_loss(p, cfg, batch)[0])(params)
+
+
+def eval_loss(cfg, params) -> float:
+    batch = {k: jnp.asarray(v) for k, v in
+             make_batch(cfg, SHAPE, seed=77, step=123, task=TASK).items()}
+    return float(lm.train_loss(params, cfg, batch)[0])
+
+
+def run_method(name: str, acfg: AdapterConfig):
+    cfg = get_smoke_config(ARCH)
+    run = RunConfig(model=cfg, shape=SHAPE, adapter=acfg,
+                    train=TrainConfig(learning_rate=1e-2, total_steps=STEPS,
+                                      warmup_steps=3))
+    base = lm.init_params(cfg, jax.random.PRNGKey(0))
+    cg = (calib_grads(cfg, base) if acfg.kind == "shira"
+          and acfg.mask in ("grad", "snip") else None)
+    tr = Trainer(run, TrainerConfig(), calib_grads=cg)
+    out = tr.fit(STEPS, batches=batch_iterator(cfg, SHAPE, seed=0, task=TASK),
+                 log=None)
+    eff = core.materialize(tr.base, out["state"]["trainable"], tr.aux,
+                           acfg) if acfg.kind != "none" else \
+        out["state"]["trainable"]
+    final = eval_loss(cfg, eff)
+    n_train = sum(x.size for x in jax.tree.leaves(out["state"]["trainable"]))
+    n_base = sum(x.size for x in jax.tree.leaves(tr.base))
+    pct_c = core.switching.changed_fraction(tr.base, eff)
+    return final, 100 * n_train / n_base, 100 * pct_c
+
+
+def alpha_sweep():
+    cfg = get_smoke_config(ARCH)
+    acfg = AdapterConfig(kind="shira", mask="wm", sparsity=0.98)
+    run = RunConfig(model=cfg, shape=SHAPE, adapter=acfg,
+                    train=TrainConfig(learning_rate=1e-2, total_steps=STEPS,
+                                      warmup_steps=3))
+    tr = Trainer(run, TrainerConfig())
+    out = tr.fit(STEPS, batches=batch_iterator(cfg, SHAPE, seed=0, task=TASK),
+                 log=None)
+    print("alpha,task_loss")
+    for alpha in (0.0, 0.5, 1.0, 1.5, 2.0):
+        eff = core.materialize(tr.base, out["state"]["trainable"], tr.aux,
+                               acfg, alpha=alpha)
+        print(f"{alpha},{eval_loss(cfg, eff):.4f}")
+
+
+def main() -> None:
+    if "--alpha-sweep" in sys.argv:
+        alpha_sweep()
+        return
+    print("method,final_loss,trainable_pct,changed_pct")
+    base_loss = eval_loss(get_smoke_config(ARCH),
+                          lm.init_params(get_smoke_config(ARCH),
+                                         jax.random.PRNGKey(0)))
+    print(f"base,{base_loss:.4f},0.00,0.00")
+    for name, acfg in METHODS:
+        loss, pct_t, pct_c = run_method(name, acfg)
+        print(f"{name},{loss:.4f},{pct_t:.2f},{pct_c:.2f}")
+
+
+if __name__ == "__main__":
+    main()

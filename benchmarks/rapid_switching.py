@@ -1,0 +1,63 @@
+"""Paper Fig. 5 / App. B analog: SHiRA scatter-load vs LoRA fuse latency.
+
+For weight dims 1024..4096 (paper uses up to 8192; CPU wall-clock here),
+measures:
+  * SHiRA switch: scatter-add of 1% packed updates (jnp path + Pallas
+    scatter_apply in interpret mode for the kernel-shape check),
+  * LoRA fuse: W + A@B at rank 64 (the paper's LVM rank),
+and derives the TPU-side byte model: adapter bytes moved vs full-weight
+rewrite + GEMM FLOPs (reported as model terms since this container has no
+TPU clock).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as M
+
+RANK = 64
+SPARSITY = 0.99
+
+
+def timed(fn, *args, reps=5):
+    fn(*args).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def main() -> None:
+    print("dim,shira_scatter_ms,lora_fuse_ms,speedup,"
+          "shira_bytes_mb,lora_bytes_mb,lora_gemm_gflop")
+    rng = np.random.RandomState(0)
+    for dim in (1024, 2048, 4096):
+        w = jnp.asarray(rng.randn(dim, dim), jnp.float32)
+        k = int((1 - SPARSITY) * dim * dim)
+        idx = jnp.asarray(np.sort(rng.choice(dim * dim, k, replace=False)),
+                          jnp.int32)
+        vals = jnp.asarray(rng.randn(k), jnp.float32)
+        a = jnp.asarray(rng.randn(dim, RANK), jnp.float32)
+        b = jnp.asarray(rng.randn(RANK, dim), jnp.float32)
+
+        scatter = jax.jit(lambda w, i, v: M.scatter_packed_add(
+            w[None], i[None], v[None])[0])
+        fuse = jax.jit(lambda w, a, b: w + a @ b)
+
+        t_s = timed(scatter, w, idx, vals) * 1e3
+        t_f = timed(fuse, w, a, b) * 1e3
+
+        shira_mb = k * 8 / 1e6                      # idx + val
+        lora_mb = (2 * dim * RANK + dim * dim) / 1e6 * 4  # A,B in + W rewrite
+        gemm_gflop = 2 * RANK * dim * dim / 1e9
+        print(f"{dim},{t_s:.2f},{t_f:.2f},{t_f / t_s:.2f},"
+              f"{shira_mb:.2f},{lora_mb:.2f},{gemm_gflop:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun.json (written by repro.launch.dryrun) and emits, per
+(arch x shape x mesh): the three roofline terms, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs, and the roofline fraction.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.analysis.roofline import HW, model_flops, roofline_terms
+from repro.configs import get_config
+
+
+def build_rows(path="results/dryrun.json", mesh_filter=None, adapter="none",
+               variant="none"):
+    with open(path) as f:
+        records = json.load(f)
+    rows = []
+    for r in records:
+        if not r.get("ok") or r.get("adapter", "none") != adapter:
+            continue
+        if r.get("variant", "none") != variant:
+            continue
+        if mesh_filter and len(r["mesh"]) != mesh_filter:
+            continue
+        cfg = get_config(r["arch"])
+        t = roofline_terms(r, cfg)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "variant": variant,
+            "mesh": "x".join(map(str, r["mesh"])),
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "dominant": t["dominant"],
+            "useful_ratio": t["useful_flops_ratio"],
+            "roofline_frac": t["roofline_fraction"],
+            "peak_mb": r["memory"].get("peak_device_mb", 0),
+            "compile_s": r.get("compile_s", 0),
+        })
+    return rows
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    if not os.path.exists(path):
+        print("roofline,SKIP,no dryrun.json (run repro.launch.dryrun first)")
+        return
+    rows = build_rows(path, mesh_filter=2)  # single-pod for the table
+    rows += build_rows(path, mesh_filter=2, variant="padded")
+    print("arch,shape,variant,mesh,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,roofline_frac,peak_dev_mb")
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"], x["variant"])):
+        print(f"{r['arch']},{r['shape']},{r['variant']},{r['mesh']},"
+              f"{r['compute_s']:.4f},{r['memory_s']:.4f},"
+              f"{r['collective_s']:.4f},{r['dominant'].replace('_s','')},"
+              f"{r['useful_ratio']:.3f},{r['roofline_frac']:.4f},"
+              f"{r['peak_mb']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

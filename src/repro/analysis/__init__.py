@@ -1,0 +1,2 @@
+from repro.analysis.hlo import collective_bytes, cost_summary, memory_summary  # noqa: F401
+from repro.analysis.roofline import HW, roofline_terms  # noqa: F401

@@ -1,0 +1,6 @@
+from repro.configs.base import (AdapterConfig, MLAConfig, ModelConfig,  # noqa: F401
+                                MoEConfig, RunConfig, SHAPES, ShapeSpec,
+                                SSMConfig, TrainConfig)
+from repro.configs.registry import (ARCH_IDS, all_cells,  # noqa: F401
+                                    applicable_shapes, get_config,
+                                    get_smoke_config)

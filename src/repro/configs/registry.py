@@ -1,0 +1,56 @@
+"""Architecture registry: ``--arch <id>`` ids -> ModelConfig + applicable shapes.
+
+Applicability rules (recorded in DESIGN.md §Arch-applicability):
+  * ``long_500k`` needs sub-quadratic sequence mixing -> only ssm/hybrid run it.
+  * encoder-only archs (hubert) have no decode step -> skip decode shapes.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+
+ARCH_IDS = [
+    "mamba2-780m",
+    "granite-moe-1b-a400m",
+    "deepseek-v2-lite-16b",
+    "zamba2-2.7b",
+    "paligemma-3b",
+    "hubert-xlarge",
+    "qwen1.5-32b",
+    "starcoder2-7b",
+    "deepseek-coder-33b",
+    "granite-34b",
+]
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.SMOKE_CONFIG
+
+
+def applicable_shapes(arch: str) -> List[ShapeSpec]:
+    cfg = get_config(arch)
+    out = []
+    for s in SHAPES.values():
+        if cfg.encoder_only and s.kind == "decode":
+            continue
+        if s.name == "long_500k" and not cfg.subquadratic:
+            continue
+        out.append(s)
+    return out
+
+
+def all_cells() -> List[tuple]:
+    return [(a, s.name) for a in ARCH_IDS for s in applicable_shapes(a)]

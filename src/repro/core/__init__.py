@@ -1,0 +1,12 @@
+# The paper's primary contribution: Sparse High Rank Adapters (SHiRA) —
+# mask construction, adapter training transforms, rapid switching, and
+# multi-adapter fusion — plus the LoRA/DoRA baselines it is evaluated against.
+from repro.core import adapters, fusion, masks, switching  # noqa: F401
+from repro.core.adapters import (AdapterPack, apply_pack,  # noqa: F401
+                                 init_adapter, materialize, pack_from_delta,
+                                 pack_from_shira)
+from repro.core.fusion import fuse_packs, index_overlap  # noqa: F401
+from repro.core.masks import (gather_packed, make_dense_masks,  # noqa: F401
+                              make_packed_indices, mask_grads,
+                              scatter_packed_add, scatter_packed_set)
+from repro.core.switching import LoraEngine, SwitchEngine  # noqa: F401

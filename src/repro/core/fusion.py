@@ -1,0 +1,95 @@
+"""Multi-adapter fusion diagnostics (paper §3.2, §4.2.2, §4.3.2).
+
+Fusion itself is trivial for SHiRA — naively add the sparse deltas
+(``SwitchEngine.load_fused``). This module quantifies *why* it works:
+the interference between two adapters, measured as
+
+  * index-overlap: |nz(S1) ∩ nz(S2)| / K   (exact, packed form)
+  * the ||A1^T A2|| orthogonality proxy from §3.2, comparing SHiRA's sparse
+    deltas against equivalent dense (fused-LoRA) deltas.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adapters import AdapterPack
+
+
+def index_overlap(p1: AdapterPack, p2: AdapterPack) -> Dict[str, float]:
+    """Fraction of shared nonzero coordinates per target path."""
+    out = {}
+    for path in p1.entries:
+        if path not in p2.entries:
+            continue
+        i1 = np.asarray(p1.entries[path][0])
+        i2 = np.asarray(p2.entries[path][0])
+        i1 = i1.reshape(-1, i1.shape[-1])   # per-matrix rows
+        i2 = i2.reshape(-1, i2.shape[-1])
+        fr = [np.intersect1d(a, b).size / max(min(a.size, b.size), 1)
+              for a, b in zip(i1, i2)]
+        out[path] = float(np.mean(fr))
+    return out
+
+
+def gram_interference(d1: jax.Array, d2: jax.Array) -> Tuple[float, float]:
+    """For deltas (n, m): returns (fraction of nonzeros in d1^T d2,
+    relative Frobenius interference ||d1^T d2|| / (||d1|| ||d2||))."""
+    g = jnp.einsum("nm,np->mp", d1.astype(jnp.float32), d2.astype(jnp.float32))
+    nz = float(jnp.mean(jnp.abs(g) > 1e-12))
+    num = float(jnp.linalg.norm(g))
+    den = float(jnp.linalg.norm(d1) * jnp.linalg.norm(d2) + 1e-12)
+    return nz, num / den
+
+
+def pack_to_dense(pack: AdapterPack, path: str, shape) -> jax.Array:
+    idx, val = pack.entries[path]
+    n, m = shape[-2], shape[-1]
+    lead = shape[:-2]
+    nl = int(np.prod(lead)) if lead else 1
+    idxf = jnp.reshape(idx, (nl, -1))
+    vf = jnp.reshape(val, (nl, -1)).astype(jnp.float32)
+    dense = jax.vmap(lambda ix, v: jnp.zeros((n * m,), jnp.float32).at[ix].add(v))(
+        idxf, vf)
+    return dense.reshape(shape)
+
+
+def fuse_packs(packs: List[AdapterPack], weights=None,
+               name: str = "fused") -> AdapterPack:
+    """Materialise a single pack equal to sum_i w_i * alpha_i * S_i, with
+    duplicate coordinates merged (so loading it == loading all of them)."""
+    weights = weights or [1.0] * len(packs)
+    entries = {}
+    for path in packs[0].entries:
+        idx_list, val_list = [], []
+        for p, w in zip(packs, weights):
+            if path not in p.entries:
+                continue
+            i, v = p.entries[path]
+            idx_list.append(np.asarray(i))
+            val_list.append(np.asarray(v, np.float32) * (w * p.alpha))
+        lead = idx_list[0].shape[:-1]
+        nl = int(np.prod(lead)) if lead else 1
+        flat_i = [i.reshape(nl, -1) for i in idx_list]
+        flat_v = [v.reshape(nl, -1) for v in val_list]
+        merged_i, merged_v = [], []
+        for row in range(nl):
+            cat_i = np.concatenate([fi[row] for fi in flat_i])
+            cat_v = np.concatenate([fv[row] for fv in flat_v])
+            uniq, inv = np.unique(cat_i, return_inverse=True)
+            acc = np.zeros(uniq.shape, np.float32)
+            np.add.at(acc, inv, cat_v)
+            merged_i.append(uniq)
+            merged_v.append(acc)
+        k = max(len(u) for u in merged_i)
+        mi = np.zeros((nl, k), np.int32)
+        mv = np.zeros((nl, k), np.float32)
+        for r, (u, a) in enumerate(zip(merged_i, merged_v)):
+            mi[r, :len(u)] = u          # padding points at index 0 ...
+            mv[r, :len(u)] = a          # ... with value 0 => harmless add
+        entries[path] = (jnp.asarray(mi.reshape(lead + (k,))),
+                         jnp.asarray(mv.reshape(lead + (k,))))
+    return AdapterPack(name=name, entries=entries, alpha=1.0)

@@ -1,0 +1,234 @@
+"""SHiRA mask construction — the five strategies from §3.1 of the paper.
+
+A mask selects the 1-2% of entries of each *target* weight matrix that are
+trainable. Masks are pytrees aligned with the parameter tree: ``None`` on
+non-target leaves, and on target leaves either
+
+  * a dense 0/1 array of the weight's shape (``hook`` training mode,
+    paper App. C — grads are Hadamard-masked), or
+  * packed flat indices (..., K) int32 over the trailing (n, m) dims
+    (``packed`` training/serving mode, paper App. D — optimizer state and
+    adapter storage hold only the K nonzeros).
+
+Leaves with more than 2 dims (scanned layer stacks (L, n, m), MoE expert
+stacks (L, E, n, m)) are treated as batches of matrices: selection is done
+*per matrix* with an exact per-matrix budget K, which keeps packing uniform
+and — because TP shards the trailing dims evenly — keeps per-shard update
+counts balanced.
+
+Strategies (cfg.mask):
+  struct : evenly-spaced rows + columns + the (high-rank) main diagonal
+  rand   : uniform random K entries
+  wm     : top-K |W|
+  grad   : top-K |g| from a calibration gradient
+  snip   : top-K |W * g|  (SNIP saliency, Lee et al. 2018)
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AdapterConfig
+
+PathTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter-tree walking
+# ---------------------------------------------------------------------------
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def leaf_name(path) -> str:
+    return path_str(path).split("/")[-1]
+
+
+def is_target(path, leaf, target_modules: Tuple[str, ...]) -> bool:
+    return (hasattr(leaf, "ndim") and leaf.ndim >= 2
+            and leaf_name(path) in target_modules)
+
+
+def map_targets(fn: Callable, params, target_modules: Tuple[str, ...]):
+    """tree_map over target leaves only; None elsewhere."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: fn(p, x) if is_target(p, x, target_modules) else None,
+        params)
+
+
+def target_paths(params, target_modules) -> List[str]:
+    out = []
+    jax.tree_util.tree_map_with_path(
+        lambda p, x: out.append(path_str(p))
+        if is_target(p, x, target_modules) else None, params)
+    return sorted(out)
+
+
+# ---------------------------------------------------------------------------
+# Per-matrix index selection (all return (K,) flat indices into n*m)
+# ---------------------------------------------------------------------------
+
+def budget(n: int, m: int, sparsity: float) -> int:
+    return max(1, int(round((1.0 - sparsity) * n * m)))
+
+
+def _struct_indices(n: int, m: int, cfg: AdapterConfig) -> np.ndarray:
+    """Evenly spaced rows + cols + main diagonal (the high-rank part)."""
+    rows = np.unique(np.linspace(0, n - 1, max(cfg.struct_rows, 1)).astype(np.int64))
+    cols = np.unique(np.linspace(0, m - 1, max(cfg.struct_cols, 1)).astype(np.int64))
+    idx = set()
+    for r in rows:
+        idx.update(range(int(r) * m, int(r) * m + m))
+    for c in cols:
+        idx.update(int(c) + m * np.arange(n))
+    d = min(n, m)
+    idx.update(np.arange(d) * m + np.arange(d))
+    return np.sort(np.fromiter(idx, dtype=np.int64))
+
+
+def _rand_indices(key, n: int, m: int, k: int) -> jax.Array:
+    return jax.random.choice(key, n * m, (k,), replace=False).astype(jnp.int32)
+
+
+def _topk_indices(score_flat: jax.Array, k: int) -> jax.Array:
+    _, idx = jax.lax.top_k(score_flat, k)
+    return idx.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def make_packed_indices(params, cfg: AdapterConfig, key,
+                        grads=None) -> PathTree:
+    """Pytree of packed indices: target leaves -> int32 (..., K) flat indices
+    over the trailing (n, m); None elsewhere."""
+
+    def per_leaf(path, w, g):
+        *lead, n, m = w.shape
+        nl = int(np.prod(lead)) if lead else 1
+        wf = jnp.reshape(w, (nl, n * m)).astype(jnp.float32)
+        sub = jax.random.fold_in(key, hash(path_str(path)) % (2 ** 31))
+
+        if cfg.mask == "struct":
+            idx = jnp.asarray(_struct_indices(n, m, cfg), jnp.int32)
+            idx = jnp.broadcast_to(idx[None], (nl,) + idx.shape)
+        else:
+            k = budget(n, m, cfg.sparsity)
+            if cfg.mask == "rand":
+                keys = jax.random.split(sub, nl)
+                idx = jax.vmap(lambda kk: _rand_indices(kk, n, m, k))(keys)
+            elif cfg.mask == "wm":
+                idx = jax.vmap(lambda s: _topk_indices(s, k))(jnp.abs(wf))
+            elif cfg.mask in ("grad", "snip"):
+                if g is None:
+                    raise ValueError(
+                        f"mask={cfg.mask!r} needs calibration grads")
+                gf = jnp.reshape(g, (nl, n * m)).astype(jnp.float32)
+                score = jnp.abs(gf) if cfg.mask == "grad" else jnp.abs(gf * wf)
+                idx = jax.vmap(lambda s: _topk_indices(s, k))(score)
+            else:
+                raise ValueError(f"unknown mask strategy {cfg.mask!r}")
+        return jnp.reshape(idx, tuple(lead) + (idx.shape[-1],))
+
+    if grads is None:
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x: per_leaf(p, x, None)
+            if is_target(p, x, cfg.target_modules) else None, params)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x, g: per_leaf(p, x, g)
+        if is_target(p, x, cfg.target_modules) else None, params, grads)
+
+
+def dense_mask_from_indices(w: jax.Array, idx: jax.Array) -> jax.Array:
+    """(..., n, m) weight + (..., K) flat indices -> 0/1 mask of w's shape."""
+    *lead, n, m = w.shape
+    nl = int(np.prod(lead)) if lead else 1
+    idxf = jnp.reshape(idx, (nl, idx.shape[-1]))
+
+    def one(ix):
+        z = jnp.zeros((n * m,), jnp.float32)
+        return z.at[ix].set(1.0)
+
+    return jnp.reshape(jax.vmap(one)(idxf), w.shape)
+
+
+def make_dense_masks(params, cfg: AdapterConfig, key, grads=None) -> PathTree:
+    idxs = make_packed_indices(params, cfg, key, grads)
+    return jax.tree.map(
+        lambda w, i: None if i is None else dense_mask_from_indices(w, i),
+        params, idxs, is_leaf=lambda x: x is None)
+
+
+def mask_grads(grads, masks, freeze_others: bool = True) -> Any:
+    """Hadamard gradient masking (paper Fig. 2(b), App. C).
+
+    ``freeze_others=True`` zeroes gradients of non-target leaves too, so only
+    the masked 1-2% of the model trains — exactly the packed-mode (App. D)
+    semantics, making the two implementations trajectory-identical."""
+    return jax.tree.map(
+        lambda g, m: (jnp.zeros_like(g) if (m is None and freeze_others)
+                      else g if m is None else (g * m.astype(g.dtype))),
+        grads, masks, is_leaf=lambda x: x is None)
+
+
+def mask_sparsity(masks) -> Dict[str, float]:
+    out = {}
+    for p, m in jax.tree_util.tree_flatten_with_path(
+            masks, is_leaf=lambda x: x is None)[0]:
+        if m is not None:
+            out[path_str(p)] = float(jnp.mean(m.astype(jnp.float32)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Packed gather / scatter (the numerical core of rapid switching)
+# ---------------------------------------------------------------------------
+
+def gather_packed(w: jax.Array, idx: jax.Array) -> jax.Array:
+    """w (..., n, m), idx (..., K) -> values (..., K)."""
+    *lead, n, m = w.shape
+    nl = int(np.prod(lead)) if lead else 1
+    wf = jnp.reshape(w, (nl, n * m))
+    idxf = jnp.reshape(idx, (nl, -1))
+    vals = jax.vmap(lambda row, ix: row[ix])(wf, idxf)
+    return jnp.reshape(vals, idx.shape)
+
+
+def scatter_packed_add(w: jax.Array, idx: jax.Array, val: jax.Array,
+                       alpha: float = 1.0) -> jax.Array:
+    """w (..., n, m) += alpha * scatter(val at idx). Pure-jnp reference path;
+    the Pallas ``scatter_apply`` kernel is the TPU-optimised equivalent."""
+    *lead, n, m = w.shape
+    nl = int(np.prod(lead)) if lead else 1
+    wf = jnp.reshape(w, (nl, n * m))
+    idxf = jnp.reshape(idx, (nl, -1))
+    vf = jnp.reshape(val, (nl, -1)).astype(w.dtype) * jnp.asarray(
+        alpha, w.dtype)
+    out = jax.vmap(lambda row, ix, v: row.at[ix].add(v))(wf, idxf, vf)
+    return jnp.reshape(out, w.shape)
+
+
+def scatter_packed_set(w: jax.Array, idx: jax.Array, val: jax.Array) -> jax.Array:
+    *lead, n, m = w.shape
+    nl = int(np.prod(lead)) if lead else 1
+    wf = jnp.reshape(w, (nl, n * m))
+    idxf = jnp.reshape(idx, (nl, -1))
+    vf = jnp.reshape(val, (nl, -1)).astype(w.dtype)
+    out = jax.vmap(lambda row, ix, v: row.at[ix].set(v))(wf, idxf, vf)
+    return jnp.reshape(out, w.shape)

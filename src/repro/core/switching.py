@@ -1,0 +1,136 @@
+"""Rapid adapter switching (paper §3.2, App. A/B) and the LoRA comparison.
+
+``SwitchEngine`` manages a deployed base model. Loading a SHiRA pack
+overwrites only the pack's 1-2% of entries (scatter-add of the delta);
+unloading subtracts it back — no separate fuse/unfuse stage, no unfused
+branches in the forward pass. ``LoraEngine`` reproduces the HuggingFace
+load->fuse->infer->unfuse->unload pipeline the paper benchmarks against
+(W + s*A@B touches and rewrites *every* entry).
+
+Both engines account bytes moved so benchmarks/rapid_switching.py can report
+the switch-cost asymmetry measured in the paper's Fig. 5 alongside wall-clock.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adapters import AdapterPack, apply_pack
+
+
+@dataclass
+class SwitchStats:
+    name: str
+    seconds: float
+    entries_written: int
+    bytes_written: int
+    weight_bytes_total: int
+
+
+def _tree_bytes(tree) -> int:
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+class SwitchEngine:
+    """Holds deployed params; one active adapter (or fused set) at a time."""
+
+    def __init__(self, params):
+        self.params = params
+        self.active: List[AdapterPack] = []
+        self.history: List[SwitchStats] = []
+
+    def _apply(self, pack: AdapterPack, sign: float):
+        self.params = apply_pack(self.params, pack, sign=sign)
+
+    def load(self, pack: AdapterPack) -> SwitchStats:
+        t0 = time.perf_counter()
+        self._apply(pack, +1.0)
+        jax.block_until_ready(jax.tree.leaves(self.params)[0])
+        dt = time.perf_counter() - t0
+        self.active.append(pack)
+        st = SwitchStats(pack.name, dt, pack.num_params(), pack.nbytes(),
+                         _tree_bytes(self.params))
+        self.history.append(st)
+        return st
+
+    def unload(self) -> Optional[SwitchStats]:
+        if not self.active:
+            return None
+        pack = self.active.pop()
+        t0 = time.perf_counter()
+        self._apply(pack, -1.0)
+        jax.block_until_ready(jax.tree.leaves(self.params)[0])
+        dt = time.perf_counter() - t0
+        st = SwitchStats("-" + pack.name, dt, pack.num_params(),
+                         pack.nbytes(), _tree_bytes(self.params))
+        self.history.append(st)
+        return st
+
+    def switch(self, pack: AdapterPack) -> SwitchStats:
+        """unload current -> load new; the paper's rapid-switch operation."""
+        while self.active:
+            self.unload()
+        return self.load(pack)
+
+    def load_fused(self, packs: List[AdapterPack],
+                   weights: Optional[List[float]] = None) -> List[SwitchStats]:
+        """Multi-adapter fusion by naive addition (paper Fig. 3(b))."""
+        weights = weights or [1.0] * len(packs)
+        out = []
+        for p, w in zip(packs, weights):
+            scaled = AdapterPack(p.name, p.entries, alpha=p.alpha * w)
+            out.append(self.load(scaled))
+        return out
+
+
+class LoraEngine:
+    """The fuse/unfuse pipeline the paper compares against (App. A)."""
+
+    def __init__(self, params):
+        self.params = params
+        self.active = None
+
+    def fuse(self, lora: Dict[str, dict], scale: float) -> float:
+        """lora: path -> {"A","B"}; W += scale * A@B for every target."""
+        t0 = time.perf_counter()
+
+        def walk(tree, prefix):
+            if isinstance(tree, dict):
+                return {k: walk(v, prefix + (str(k),)) for k, v in tree.items()}
+            if isinstance(tree, (list, tuple)):
+                return [walk(v, prefix + (str(i),)) for i, v in enumerate(tree)]
+            key = "/".join(prefix)
+            if key in lora:
+                t = lora[key]
+                delta = scale * jnp.einsum("...nr,...rm->...nm",
+                                           t["A"].astype(jnp.float32),
+                                           t["B"].astype(jnp.float32))
+                return (tree.astype(jnp.float32) + delta).astype(tree.dtype)
+            return tree
+
+        self.params = walk(self.params, ())
+        jax.block_until_ready(jax.tree.leaves(self.params)[0])
+        self.active = (lora, scale)
+        return time.perf_counter() - t0
+
+    def unfuse(self) -> float:
+        if self.active is None:
+            return 0.0
+        lora, scale = self.active
+        t = self.fuse(lora, -scale)
+        self.active = None
+        return t
+
+
+def changed_fraction(base, switched) -> float:
+    """%C from the paper's tables: fraction of weights differing from base."""
+    tot, diff = 0, 0
+    for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(switched)):
+        tot += a.size
+        diff += int(jnp.sum(jnp.not_equal(a, b)))
+    return diff / max(tot, 1)

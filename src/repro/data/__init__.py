@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticTask, TaskSpec, batch_iterator,  # noqa: F401
+                                 make_batch)

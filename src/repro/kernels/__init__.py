@@ -1,0 +1,10 @@
+# Pallas TPU kernels for the perf-critical paths the paper optimises:
+#   scatter_apply  — rapid adapter switching (paper App. B `scatter_op`)
+#   masked_update  — dense-mask fused apply (vectorised alternative)
+#   sparse_adamw   — packed optimizer update (paper App. D)
+#   flash_decode   — blocked decode attention (the serving hot loop)
+# Validated against ref.py oracles in interpret mode (CPU container); the
+# BlockSpecs target TPU VMEM tiling.
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.ops import (bucket_updates, flash_decode,  # noqa: F401
+                               masked_update, scatter_apply, sparse_adamw)

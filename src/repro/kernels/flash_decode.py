@@ -1,0 +1,90 @@
+"""flash_decode — blocked online-softmax decode attention.
+
+Single-query attention against a long KV cache is the serving hot loop the
+SHiRA adapters plug into (decode_32k / long_500k shapes). The kernel walks
+the KV sequence in (Sb)-sized blocks, maintaining the online-softmax
+running max / normaliser / accumulator in VMEM scratch, and emits the
+normalised output on the last block. GQA group heads share their KV head's
+pass (q laid out as (B, KV, G, D)).
+
+Grid: (B, KV, S // Sb) — the sequence axis iterates innermost so scratch
+accumulation across blocks is sequential per (batch, kv-head).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, out_ref,
+                         acc_ref, m_ref, l_ref, *, sb: int):
+    blk = pl.program_id(2)
+    nblk = pl.num_programs(2)
+
+    @pl.when(blk == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (Sb, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)          # (Sb, D)
+    kv_len = kvlen_ref[0]
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = blk * sb + jax.lax.broadcasted_iota(jnp.int32, (1, sb), 1)
+    s = jnp.where(pos < kv_len, s, NEG_INF)            # (G, Sb)
+
+    m_prev = m_ref[...]                                # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                             # (G, Sb)
+    corr = jnp.exp(m_prev - m_new)                     # (G, 1)
+    l_new = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(blk == nblk - 1)
+    def _():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
+
+
+def flash_decode_blocks(q: jax.Array, k: jax.Array, v: jax.Array,
+                        kv_len: jax.Array, *, sb: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B, KV, G, D); k/v: (B, S, KV, D); kv_len: (1,) int32.
+    Returns (B, KV, G, D). S must be a multiple of sb."""
+    B, KV, G, D = q.shape
+    S = k.shape[1]
+    assert S % sb == 0, (S, sb)
+    kernel = functools.partial(_flash_decode_kernel, sb=sb)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KV, S // sb),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, i: (0,)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, sb, 1, D), lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((1, sb, 1, D), lambda b, h, i: (b, i, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, i: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, q, k, v)

@@ -1,0 +1,103 @@
+"""flash_prefill — tiled causal attention forward (online softmax).
+
+The §Perf analysis showed the pure-JAX chunked attention still streams
+(q_chunk, S)-sized score tensors through HBM several times per chunk (the
+dominant memory term on every big dense train/prefill cell). This kernel
+keeps score tiles in VMEM: grid walks (batch, head, q-block, kv-block) with
+the kv axis innermost, carrying the online-softmax running max / sum /
+accumulator in VMEM scratch — HBM traffic collapses to q, k, v, o.
+
+Causality is exploited at tile granularity: kv-blocks strictly above the
+diagonal are skipped via ``pl.when`` (no DMA cost for masked-out tiles on
+TPU since the loads are conditional).
+
+GQA: q heads of one kv group are processed together, q laid out as
+(B, KV, G, Sq, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_prefill_kernel(q_ref, k_ref, v_ref, out_ref,
+                          acc_ref, m_ref, l_ref, *,
+                          bq: int, bkv: int, causal: bool):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # tile is fully masked iff its lowest q position < its first kv position
+    run = (not causal) or (qi * bq + bq - 1 >= ki * bkv)
+
+    @pl.when(run)
+    def _():
+        qf = q_ref[0, 0].astype(jnp.float32)                # (G, bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # (bkv, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)           # (bkv, D)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(qf.shape[-1], jnp.float32))
+        s = jax.lax.dot_general(qf, k, (((2,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        # s: (G, bq, bkv)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (1, bq, 1), 1)
+            kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bkv), 2)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]                                 # (G, bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
+
+
+def flash_prefill_blocks(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         bq: int = 512, bkv: int = 512, causal: bool = True,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B, KV, G, Sq, D); k/v: (B, Skv, KV, D) -> (B, KV, G, Sq, D).
+
+    Sq % bq == 0 and Skv % bkv == 0 (ops.py pads).
+    """
+    B, KV, G, Sq, D = q.shape
+    Skv = k.shape[1]
+    assert Sq % bq == 0 and Skv % bkv == 0, (Sq, bq, Skv, bkv)
+    kernel = functools.partial(_flash_prefill_kernel, bq=bq, bkv=bkv,
+                               causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KV, Sq // bq, Skv // bkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, bq, D), lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, bkv, 1, D), lambda b, h, i, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bkv, 1, D), lambda b, h, i, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, bq, D),
+                               lambda b, h, i, j: (b, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, bq, D), jnp.float32),
+            pltpu.VMEM((G, bq, 1), jnp.float32),
+            pltpu.VMEM((G, bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

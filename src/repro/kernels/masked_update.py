@@ -1,0 +1,39 @@
+"""masked_update — dense-mask tile update (the vectorised SHiRA apply).
+
+W_out = W + alpha * (M ⊙ V), computed tile-by-tile in VMEM. This is the
+bandwidth-optimal path when the adapter ships as a dense (mask, delta) pair
+(e.g. straight out of hook-mode training) and the in-training fused apply
+for masked finetuning: fully vectorised on the VPU, one pass over W.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masked_update_kernel(alpha_ref, w_ref, m_ref, v_ref, out_ref):
+    alpha = alpha_ref[0]
+    w = w_ref[...].astype(jnp.float32)
+    out = w + alpha * m_ref[...].astype(jnp.float32) \
+        * v_ref[...].astype(jnp.float32)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def masked_update_tiles(w: jax.Array, mask: jax.Array, vals: jax.Array,
+                        alpha: jax.Array, *, bn: int = 256, bm: int = 256,
+                        interpret: bool = False) -> jax.Array:
+    """w/mask/vals: (n, m); alpha: (1,) f32."""
+    n, m = w.shape
+    assert n % bn == 0 and m % bm == 0, (n, m, bn, bm)
+    grid = (n // bn, m // bm)
+    tile = pl.BlockSpec((bn, bm), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _masked_update_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i, j: (0,)), tile, tile, tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((n, m), w.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(alpha, w, mask, vals)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every kernel — the ground truth the Pallas kernels
+are validated against (tests sweep shapes/dtypes in interpret mode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scatter_apply_ref(w: jax.Array, flat_idx: jax.Array, vals: jax.Array,
+                      alpha: float = 1.0) -> jax.Array:
+    """w: (n, m); flat_idx/vals: (K,). W + alpha * scatter(vals)."""
+    n, m = w.shape
+    out = w.reshape(-1).astype(jnp.float32).at[flat_idx].add(
+        alpha * vals.astype(jnp.float32))
+    return out.reshape(n, m).astype(w.dtype)
+
+
+def masked_update_ref(w: jax.Array, mask: jax.Array, vals: jax.Array,
+                      alpha: float = 1.0) -> jax.Array:
+    out = w.astype(jnp.float32) + alpha * mask.astype(jnp.float32) \
+        * vals.astype(jnp.float32)
+    return out.astype(w.dtype)
+
+
+def sparse_adamw_ref(values, grads, mu, nu, *, lr, b1, b2, eps, wd, step):
+    g = grads.astype(jnp.float32)
+    v = values.astype(jnp.float32)
+    m = b1 * mu + (1 - b1) * g
+    u = b2 * nu + (1 - b2) * g * g
+    c1 = 1.0 - b1 ** step
+    c2 = 1.0 - b2 ** step
+    delta = (m / c1) / (jnp.sqrt(u / c2) + eps) + wd * v
+    return (v - lr * delta).astype(values.dtype), m, u
+
+
+def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Skv, KV, D) -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: int) -> jax.Array:
+    """q: (B, KV, G, D); k/v: (B, S, KV, D). Masked softmax attention."""
+    B, KV, G, D = q.shape
+    S = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, None, None, :] < kv_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,57 @@
+"""sparse_adamw — fused packed-AdamW update (paper App. D, kernelised).
+
+Packed SHiRA training keeps optimizer state only for the K nonzero values
+per matrix. This kernel fuses the whole moment + parameter update over the
+packed (…, K) vectors in one pass: 4 reads + 3 writes per element and zero
+intermediate HBM traffic (vs ~7 separate elementwise HLO ops).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adamw_kernel(scal_ref, v_ref, g_ref, m_ref, u_ref,
+                  v_out, m_out, u_out):
+    lr = scal_ref[0]
+    b1 = scal_ref[1]
+    b2 = scal_ref[2]
+    eps = scal_ref[3]
+    wd = scal_ref[4]
+    c1 = scal_ref[5]   # 1 - b1**t
+    c2 = scal_ref[6]   # 1 - b2**t
+    g = g_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    u = b2 * u_ref[...] + (1.0 - b2) * g * g
+    mh = m / c1
+    uh = u / c2
+    delta = mh / (jnp.sqrt(uh) + eps) + wd * v
+    v_out[...] = (v - lr * delta).astype(v_out.dtype)
+    m_out[...] = m
+    u_out[...] = u
+
+
+def sparse_adamw_blocks(values: jax.Array, grads: jax.Array, mu: jax.Array,
+                        nu: jax.Array, scalars: jax.Array, *,
+                        block: int = 2048,
+                        interpret: bool = False):
+    """values/grads/mu/nu: (K,) — pre-padded to a multiple of ``block``.
+    scalars: (8,) f32 = [lr, b1, b2, eps, wd, c1, c2, pad]."""
+    k = values.shape[0]
+    assert k % block == 0, (k, block)
+    grid = (k // block,)
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _adamw_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8,), lambda i: (0,)), vec, vec, vec, vec],
+        out_specs=(vec, vec, vec),
+        out_shape=(jax.ShapeDtypeStruct((k,), values.dtype),
+                   jax.ShapeDtypeStruct((k,), jnp.float32),
+                   jax.ShapeDtypeStruct((k,), jnp.float32)),
+        interpret=interpret,
+    )(scalars, values, grads, mu, nu)

@@ -1,0 +1,2 @@
+from repro.launch.mesh import (dp_axes, make_host_mesh, make_mesh,  # noqa: F401
+                               make_production_mesh)

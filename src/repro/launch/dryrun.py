@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+__doc__ = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, with zero device allocation:
+  * compiled.memory_analysis()  — proves the program fits per device,
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * collective byte counts parsed from the post-SPMD optimized HLO,
+and appends a JSON record to --out (default results/dryrun.json).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both [--adapter shira] [--out results/dryrun.json]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import (collective_bytes, cost_summary,
+                                memory_summary, program_cost)
+from repro.configs import (SHAPES, AdapterConfig, TrainConfig, applicable_shapes,
+                           get_config, registry)
+from repro.launch import steps as S
+from repro.launch.actctx import sharding_hints
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import cache_specs
+
+
+# Optimized per-arch variants (§Perf): head-group padding + kv-repeat makes
+# attention shard over 16-way TP instead of replicating (zero-init pads are
+# function-preserving — see models/attention.padded_heads).
+VARIANTS = {
+    "padded": {
+        "deepseek-coder-33b": dict(pad_heads_to=64, attn_repeat_kv=True),
+        "starcoder2-7b": dict(pad_heads_to=48, attn_repeat_kv=True),
+        "qwen1.5-32b": dict(pad_heads_to=48, pad_kv_to=48),
+        "paligemma-3b": dict(pad_heads_to=16, attn_repeat_kv=True),
+        "granite-34b": dict(attn_repeat_kv=True),
+        "granite-moe-1b-a400m": dict(attn_repeat_kv=True),
+    },
+}
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *,
+               adapter: str = "none", variant: str = "none",
+               extra_tags: str = "") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if variant != "none":
+        cfg = cfg.replace(**VARIANTS[variant].get(arch, {}))
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+
+    if shape.kind == "train":
+        tcfg = TrainConfig()
+        batch = S.abstract_batch(cfg, shape)
+        state_sh, batch_sh = S.train_shardings(cfg, shape, mesh)
+        hints = S.sharding_hints_for(cfg, shape, mesh)
+        if adapter == "shira":
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.launch import sharding as shd
+            acfg = AdapterConfig(kind="shira", mask="rand", sparsity=0.99)
+            # shard-local packed adapter (see core.materialize_sharded)
+            values, idx, pspecs, vsh = S.abstract_shira_sharded(
+                cfg, acfg, mesh)
+            step = S.make_shira_train_step(cfg, tcfg, acfg, mesh=mesh,
+                                           pspecs=pspecs)
+            state = {"trainable": values, "mu": values, "nu": values,
+                     "step": jax.ShapeDtypeStruct((), jnp.int32)}
+            repl = NamedSharding(mesh, P())
+            st_sh = {"trainable": vsh, "mu": vsh, "nu": vsh, "step": repl}
+            base = S.abstract_params(cfg)
+            base_sh = S._ns(mesh, shd.param_specs(base, cfg, mesh))
+            with sharding_hints(**hints):
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(st_sh, batch_sh, base_sh, vsh),
+                ).lower(state, batch, base, idx)
+        else:
+            step = S.make_train_step(cfg, tcfg)
+            state = S.abstract_train_state(cfg)
+            with sharding_hints(**hints):
+                lowered = jax.jit(
+                    step, in_shardings=(state_sh, batch_sh),
+                    donate_argnums=(0,),
+                ).lower(state, batch)
+
+    elif shape.kind == "prefill":
+        params = S.abstract_params(cfg, dtype=jnp.bfloat16)
+        psh = S.serve_param_shardings(cfg, mesh)
+        batch = S.abstract_batch(cfg, shape, with_labels=False)
+        _, batch_sh = S.train_shardings(cfg, shape, mesh)
+        batch_sh = {k: v for k, v in batch_sh.items() if k in batch}
+        hints = S.sharding_hints_for(cfg, shape, mesh)
+        if cfg.encoder_only:
+            step = S.make_encode_step(cfg)
+        else:
+            step = S.make_prefill_step(cfg, cache_size=shape.seq_len)
+        with sharding_hints(**hints):
+            lowered = jax.jit(step, in_shardings=(psh, batch_sh)).lower(
+                params, batch)
+
+    else:  # decode
+        params = S.abstract_params(cfg, dtype=jnp.bfloat16)
+        cache = S.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        psh, csh, tsh = S.decode_shardings(cfg, shape, mesh)
+        tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        step = S.make_decode_step(cfg)
+        lowered = jax.jit(
+            step, in_shardings=(psh, csh, tsh, None),
+            donate_argnums=(1,),
+        ).lower(params, cache, tokens, pos)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    hlo_text = compiled.as_text()
+    # archive the optimized HLO (zstd) so analysis passes can be re-run
+    # without recompiling 62 cells
+    try:
+        import zstandard
+        os.makedirs("results/hlo", exist_ok=True)
+        tag = (f"{arch}__{shape_name}__"
+               f"{'x'.join(map(str, mesh.devices.shape))}__{adapter}"
+               + ("" if variant == "none" else f"__{variant}"))
+        with open(f"results/hlo/{tag}.hlo.zst", "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=6).compress(
+                hlo_text.encode()))
+    except Exception:
+        pass
+    mem = memory_summary(compiled)
+    cost_raw = cost_summary(compiled)          # XLA aggregate (loops once)
+    cost = program_cost(hlo_text)              # loop-weighted (ours)
+    coll = collective_bytes(hlo_text)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
+        "kind": shape.kind, "adapter": adapter, "variant": variant,
+        "tags": extra_tags,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem, "cost": cost, "cost_xla_raw": cost_raw,
+        "collectives": coll,
+        "ok": True,
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--adapter", default="none", choices=["none", "shira"])
+    ap.add_argument("--variant", default="none", choices=["none", "padded"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    archs = registry.ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], tuple(r["mesh"]), r.get("adapter", "none"),
+             r.get("variant", "none"))
+            for r in results if r.get("ok")}
+
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            shapes = ([s.name for s in applicable_shapes(arch)]
+                      if args.shape == "all" else args.shape.split(","))
+            app = {s.name for s in applicable_shapes(arch)}
+            for shape_name in shapes:
+                if shape_name not in app:
+                    print(f"[dryrun] SKIP {arch} x {shape_name} (inapplicable)")
+                    continue
+                key = (arch, shape_name, tuple(mesh.devices.shape),
+                       args.adapter, args.variant)
+                if key in done:
+                    print(f"[dryrun] cached {key}")
+                    continue
+                print(f"[dryrun] {arch} x {shape_name} x mesh{mesh.devices.shape} "
+                      f"adapter={args.adapter} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape_name, mesh,
+                                     adapter=args.adapter,
+                                     variant=args.variant)
+                    print(f"[dryrun]   ok: compile={rec['compile_s']}s "
+                          f"flops={rec['cost'].get('flops', 0):.3e} "
+                          f"dev_mem={rec['memory'].get('temp_mb', '?')}MB "
+                          f"coll={rec['collectives'].get('total_gb', 0):.2f}GB",
+                          flush=True)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": list(mesh.devices.shape),
+                           "adapter": args.adapter, "ok": False,
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(f"[dryrun]   FAIL {type(e).__name__}: {e}",
+                          flush=True)
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"[dryrun] {n_ok}/{len(results)} cells OK -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

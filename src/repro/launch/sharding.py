@@ -1,0 +1,237 @@
+"""Logical -> physical sharding rules.
+
+Parameter leaves are mapped to PartitionSpecs by *leaf name* (the naming
+convention documented in repro/models/layers.py). Rules give the spec of the
+trailing "semantic" dims; any extra leading dims (layer stacks (L, ...),
+hybrid groups (G, k, ...), expert stacks) are padded with None.
+
+Megatron-style TP over the ``model`` axis:
+  column-parallel (out-dim sharded): wq wk wv w_up w_gate in_proj w_dkv wq_a
+                                     wq_b w_uk w_uv + their biases
+  row-parallel  (in-dim sharded):    wo w_down out_proj
+  expert-parallel:                   experts_* sharded on the expert dim
+  vocab-parallel:                    emb (V, d) and lm_head (d, V)
+
+FSDP (cfg.fsdp) additionally shards the non-TP matrix dim over ``data``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.masks import leaf_name, path_str
+from repro.launch.mesh import axis_size, dp_axes
+
+# name -> (n_semantic_dims, spec builder(fsdp_axis) )
+_COL = lambda f: (2, lambda: P(f, "model"))
+_ROW = lambda f: (2, lambda: P("model", f))
+
+
+def _rules(fsdp: Optional[str]) -> Dict[str, Tuple[int, Any]]:
+    f = fsdp
+    return {
+        # attention / MLA
+        "wq": _COL(f), "wk": _COL(f), "wv": _COL(f),
+        "wq_a": _COL(f), "wq_b": _COL(f),
+        "w_dkv": (2, lambda: P(f, None)),     # latent dim is tiny: replicate
+        "w_uk": _COL(f), "w_uv": _COL(f),
+        "wo": _ROW(f),
+        "bq": (1, lambda: P("model")), "bk": (1, lambda: P("model")),
+        "bv": (1, lambda: P("model")),
+        # MLPs
+        "w_up": _COL(f), "w_gate": _COL(f), "w_down": _ROW(f),
+        # MoE
+        "w_router": (2, lambda: P(f, None)),
+        "experts_w_up": (3, lambda: P("model", f, None)),
+        "experts_w_gate": (3, lambda: P("model", f, None)),
+        "experts_w_down": (3, lambda: P("model", None, f)),
+        # Mamba2 (separate shard-aligned projections; see mamba2.py docstring)
+        "in_z": _COL(f), "in_x": _COL(f), "in_dt": _COL(f),
+        "in_bc": (2, lambda: P(f, None)),     # 2*g*n is tiny: replicate
+        "out_proj": _ROW(f),
+        "conv_x_w": (2, lambda: P(None, "model")),
+        "conv_x_b": (1, lambda: P("model")),
+        "conv_bc_w": (2, lambda: P(None, None)),
+        "conv_bc_b": (1, lambda: P(None)),
+        "A_log": (1, lambda: P(None)), "D": (1, lambda: P(None)),
+        "dt_bias": (1, lambda: P(None)),
+        # zamba2 shared-block fuse
+        "w_fuse": (2, lambda: P(f, None)),
+        # embeddings
+        "emb": (2, lambda: P("model", f)),
+        "lm_head": (2, lambda: P(f, "model")),
+        # norms
+        "scale": (1, lambda: P(None)),
+    }
+
+
+def _axis_prod(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        out = 1
+        for e in entry:
+            out *= axis_size(mesh, e)
+        return out
+    return axis_size(mesh, entry)
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop axes that do not divide the corresponding dim (jit in_shardings
+    require exact divisibility; GSPMD-internal padding is not available for
+    explicitly-specified argument shardings)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        out.append(entry if dim % _axis_prod(mesh, entry) == 0 else None)
+    return P(*out)
+
+
+def param_spec(path, leaf, cfg: ModelConfig, mesh) -> P:
+    name = leaf_name(path)
+    fsdp = "data" if cfg.fsdp else None
+    rules = _rules(fsdp)
+    if name not in rules:
+        return P()  # replicate anything unknown (defensive)
+    # Head-alignment guard (found via dry-run, §Perf): sharding the flat
+    # (H*hd) projection when H doesn't divide TP splits *inside* a head, so
+    # the attention contractions run over a sharded head_dim — GSPMD then
+    # psums score/value tensors every layer. Replicating the projection is
+    # strictly cheaper (weights are small; heads compute replicates).
+    tp = axis_size(mesh, "model")
+    if cfg.attn_type == "gqa":
+        from repro.models.attention import padded_heads
+        hp, kvp = padded_heads(cfg)
+        if name in ("wq", "wo", "bq") and hp % tp != 0:
+            return P(*([None] * leaf.ndim))
+        if name in ("wk", "wv", "bk", "bv") and kvp % tp != 0:
+            return P(*([None] * leaf.ndim))
+    nsem, builder = rules[name]
+    spec = builder()
+    extra = leaf.ndim - nsem
+    if extra < 0:
+        return P()
+    spec = P(*([None] * extra + list(spec)))
+    spec = sanitize_spec(spec, leaf.shape, mesh)
+    # vocab dims that don't divide TP (50280, 49155, 504): fall back to
+    # sharding the embedding dim over `model` instead of replicating ~1GB.
+    if name == "emb" and spec[0] is None and \
+            leaf.shape[1] % axis_size(mesh, "model") == 0:
+        spec = P(None, "model")
+    if name == "lm_head" and spec[1] is None and \
+            leaf.shape[0] % axis_size(mesh, "model") == 0:
+        spec = P("model", None)
+    return spec
+
+
+def param_specs(params_shape, cfg: ModelConfig, mesh):
+    """Pytree of PartitionSpec matching an eval_shape'd parameter tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: param_spec(p, x, cfg, mesh), params_shape)
+
+
+def sanitize_tree(spec_tree, shape_tree, mesh):
+    return jax.tree.map(
+        lambda s, x: sanitize_spec(s, x.shape, mesh), spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings_for(tree_shape, cfg: ModelConfig, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(tree_shape, cfg, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(cfg: ModelConfig, shape: ShapeSpec, mesh) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([axis_size(mesh, a) for a in dp]))
+    bspec = dp if shape.global_batch % dp_size == 0 and \
+        shape.global_batch >= dp_size else None
+    out: Dict[str, P] = {}
+    if cfg.modality == "audio":
+        out["frame_embeds"] = P(bspec, None, None)
+    else:
+        out["tokens"] = P(bspec, None)
+        if cfg.modality == "vision":
+            out["patch_embeds"] = P(bspec, None, None)
+    out["labels"] = P(bspec, None)
+    return out
+
+
+def cache_batch_axes(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """How to shard (batch, seq) of KV caches: batch over dp when divisible,
+    otherwise shard cache *sequence* over 'data' (long-context batch=1)."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([axis_size(mesh, a) for a in dp]))
+    if shape.global_batch % dp_size == 0 and shape.global_batch >= dp_size:
+        return dp, None          # (batch axes, seq axes)
+    return None, ("data",)       # sequence-sharded decode
+
+
+def kv_cache_spec(cfg: ModelConfig, shape: ShapeSpec, mesh, lead: int,
+                  mla: bool) -> Any:
+    """Spec for one stage's stacked KVCache; ``lead`` = # leading stack dims.
+
+    Head dim is sharded over ``model`` when it divides evenly; otherwise the
+    cache *sequence* is sharded over ``model`` (MQA kv=1, kv=8 vs 16-way TP,
+    MHA kv=40) — even sharding beats GSPMD padding waste. MLA caches shard
+    the latent dim (it is 512 = 32x16)."""
+    b_ax, s_ax = cache_batch_axes(cfg, shape, mesh)
+    pad = [None] * lead
+    if mla:  # (..., B, S, r) latent + (..., B, S, rope)
+        lat = "model" if cfg.mla.kv_lora_rank % axis_size(mesh, "model") == 0 \
+            else None
+        k = P(*pad, b_ax, s_ax, lat)
+        v = P(*pad, b_ax, s_ax, None)
+    else:    # (..., B, S, KV, hd)
+        from repro.models.attention import padded_heads
+        if padded_heads(cfg)[1] % axis_size(mesh, "model") == 0:
+            heads, seq = "model", s_ax
+        else:
+            heads = None
+            seq = ("data", "model") if s_ax else "model"
+        k = P(*pad, b_ax, seq, heads, None)
+        v = P(*pad, b_ax, seq, heads, None)
+    from repro.models.attention import KVCache
+    return KVCache(k, v)
+
+
+def mamba_cache_spec(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                     lead: int) -> Any:
+    b_ax, _ = cache_batch_axes(cfg, shape, mesh)
+    pad = [None] * lead
+    d_inner = cfg.ssm.expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm.head_dim
+    heads = "model" if n_heads % axis_size(mesh, "model") == 0 else None
+    from repro.models.mamba2 import MambaCache
+    return MambaCache(
+        ssm=P(*pad, b_ax, heads, None, None),
+        conv_x=P(*pad, b_ax, None, "model"),
+        conv_bc=P(*pad, b_ax, None, None),
+    )
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """Spec tree matching lm.init_cache's structure."""
+    from repro.models.lm import stage_plan
+    out = []
+    for kind, n in stage_plan(cfg):
+        if kind == "mamba":
+            out.append(mamba_cache_spec(cfg, shape, mesh, lead=1))
+        elif kind == "hybrid":
+            out.append({
+                "mamba": mamba_cache_spec(cfg, shape, mesh, lead=2),
+                "attn": kv_cache_spec(cfg, shape, mesh, lead=1,
+                                      mla=cfg.attn_type == "mla"),
+            })
+        else:
+            out.append(kv_cache_spec(cfg, shape, mesh, lead=1,
+                                     mla=cfg.attn_type == "mla"))
+    return out

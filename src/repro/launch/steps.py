@@ -1,0 +1,285 @@
+"""Standalone jittable step functions + abstract input specs for the dry-run.
+
+Every (arch x shape) cell lowers exactly one of these:
+  train_*   -> make_train_step      (full finetune or SHiRA-packed variant)
+  prefill_* -> make_prefill_step    (encoder archs: make_encode_step)
+  decode_*  -> make_decode_step     (one token against a full cache)
+
+``abstract_*`` build ShapeDtypeStruct stand-ins (weak-type-correct, zero
+allocation) for params / optimizer / batches / caches, and the matching
+NamedSharding trees, so ``jit(...).lower(...)`` needs no real arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import core
+from repro.configs.base import (AdapterConfig, ModelConfig, ShapeSpec,
+                                TrainConfig)
+from repro.launch import sharding as shd
+from repro.launch.actctx import act_sharding
+from repro.launch.mesh import axis_size, dp_axes
+from repro.models import lm
+from repro.optim import adamw_update, lr_schedule
+from repro.optim.adamw import AdamWState
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    """Full-finetune step; ``tcfg.microbatch`` > 1 enables gradient
+    accumulation (scan over microbatches — live activations shrink by the
+    accumulation factor at the cost of re-running the forward per slice)."""
+    schedule = lr_schedule(tcfg)
+    n_micro = max(tcfg.microbatch, 1)
+
+    def loss_of(params, batch):
+        from repro.models.layers import cast_compute
+        return lm.train_loss(cast_compute(params), cfg, batch)
+
+    def grads_of(params, batch):
+        if n_micro == 1:
+            return jax.value_and_grad(loss_of, has_aux=True)(params, batch)
+        micro = jax.tree.map(
+            lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                + x.shape[1:]), batch)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), g = jax.value_and_grad(loss_of, has_aux=True)(
+                params, mb)
+            acc = jax.tree.map(jnp.add, acc, g)
+            return (acc, loss_acc + loss), None
+
+        zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                             params)
+        (g, loss), _ = jax.lax.scan(body, (zeros, jnp.zeros(())), micro)
+        g = jax.tree.map(lambda x: x / n_micro, g)
+        return (loss / n_micro, {}), g
+
+    def train_step(state, batch):
+        lr = schedule(state["step"])
+        (loss, metrics), grads = grads_of(state["trainable"], batch)
+        new_t, opt, om = adamw_update(
+            grads, AdamWState(state["step"], state["mu"], state["nu"]),
+            state["trainable"], tcfg, lr)
+        return ({"trainable": new_t, "mu": opt.mu, "nu": opt.nu,
+                 "step": opt.step},
+                {"loss": loss, "grad_norm": om["grad_norm"]})
+
+    return train_step
+
+
+def make_shira_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                          acfg: AdapterConfig, mesh=None,
+                          pspecs=None) -> Callable:
+    """Packed-SHiRA step: trainable = (…,K) values; base weights frozen.
+
+    With ``mesh``: shard-local packed adapters (core.materialize_sharded) —
+    the scatter is communication-free and the value-grad sync shrinks to the
+    packed 1% (the beyond-paper collective-compression win, §Perf)."""
+    schedule = lr_schedule(tcfg)
+
+    def train_step(state, batch, base, indices):
+        lr = schedule(state["step"])
+        aux = {"indices": indices}
+
+        def loss_fn(values):
+            from repro.models.layers import cast_compute
+            if mesh is not None:
+                eff = core.adapters.materialize_sharded(
+                    base, values, indices, pspecs, mesh, alpha=1.0)
+            else:
+                eff = core.materialize(base, values, aux, acfg, alpha=1.0)
+            return lm.train_loss(cast_compute(eff), cfg, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["trainable"])
+        new_t, opt, om = adamw_update(
+            grads, AdamWState(state["step"], state["mu"], state["nu"]),
+            state["trainable"], tcfg, lr)
+        return ({"trainable": new_t, "mu": opt.mu, "nu": opt.nu,
+                 "step": opt.step},
+                {"loss": loss, "grad_norm": om["grad_norm"]})
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_size: int) -> Callable:
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch, cache_size)
+    return prefill_step
+
+
+def make_encode_step(cfg: ModelConfig) -> Callable:
+    def encode_step(params, batch):
+        return lm.encode(params, cfg, batch)
+    return encode_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, caches, tokens, pos):
+        return lm.decode_step(params, cfg, tokens, caches, pos)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract values (ShapeDtypeStruct) + shardings
+# ---------------------------------------------------------------------------
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32):
+    shapes = jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    if dtype != jnp.float32:
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dtype), shapes)
+    return shapes
+
+
+def abstract_train_state(cfg: ModelConfig):
+    p = abstract_params(cfg)
+    return {"trainable": p, "mu": p, "nu": p,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeSpec,
+                   with_labels: bool = True) -> Dict[str, Any]:
+    n, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.modality == "audio":
+        out["frame_embeds"] = jax.ShapeDtypeStruct((n, s, cfg.d_model),
+                                                   jnp.float32)
+    elif cfg.modality == "vision":
+        p = cfg.num_prefix_embeds
+        out["tokens"] = jax.ShapeDtypeStruct((n, s - p), jnp.int32)
+        out["patch_embeds"] = jax.ShapeDtypeStruct((n, p, cfg.d_model),
+                                                   jnp.float32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((n, s), jnp.int32)
+    if with_labels:
+        lbl_s = s - cfg.num_prefix_embeds if cfg.modality == "vision" else s
+        out["labels"] = jax.ShapeDtypeStruct((n, lbl_s), jnp.int32)
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, bsz: int, cache_size: int):
+    # bsz/cache_size are shape-building statics — close over them so
+    # eval_shape doesn't turn them into tracers.
+    return jax.eval_shape(lambda: lm.init_cache(cfg, bsz, cache_size))
+
+
+def abstract_shira(cfg: ModelConfig, acfg: AdapterConfig):
+    """Abstract (values, indices) trees for the packed-SHiRA step."""
+    p = abstract_params(cfg)
+    idx = jax.eval_shape(
+        lambda k: core.make_packed_indices(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), p),
+            acfg, k),
+        jax.random.PRNGKey(0))
+    values = jax.tree.map(
+        lambda i: None if i is None
+        else jax.ShapeDtypeStruct(i.shape, jnp.float32),
+        idx, is_leaf=lambda x: x is None)
+    return values, idx
+
+
+def abstract_shira_sharded(cfg: ModelConfig, acfg: AdapterConfig, mesh):
+    """Shard-local packed adapter: (L, DPC, TPC, Ks) per 3D target leaf.
+
+    Returns (values_sds, idx_sds, pspecs, value_shardings)."""
+    from repro.core.masks import budget, is_target
+    p = abstract_params(cfg)
+    pspecs = shd.param_specs(p, cfg, mesh)
+
+    def per_leaf(path, leaf, spec):
+        if not is_target(path, leaf, acfg.target_modules) or leaf.ndim != 3:
+            return None
+        L, n, m = leaf.shape
+        dpc = shd._axis_prod(mesh, spec[1] if len(spec) > 1 else None)
+        tpc = shd._axis_prod(mesh, spec[2] if len(spec) > 2 else None)
+        ks = budget(n // dpc, m // tpc, acfg.sparsity)
+        return jax.ShapeDtypeStruct((L, dpc, tpc, ks), jnp.int32)
+
+    idx = jax.tree_util.tree_map_with_path(per_leaf, p, pspecs)
+    values = jax.tree.map(
+        lambda i: None if i is None
+        else jax.ShapeDtypeStruct(i.shape, jnp.float32),
+        idx, is_leaf=lambda x: x is None)
+    vsh = jax.tree.map(
+        lambda i, s: None if i is None else NamedSharding(
+            mesh, P(s[0] if len(s) > 0 else None,
+                    s[1] if len(s) > 1 else None,
+                    s[2] if len(s) > 2 else None, None)),
+        idx, pspecs, is_leaf=lambda x: x is None)
+    return values, idx, pspecs, vsh
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees per step kind
+# ---------------------------------------------------------------------------
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    p = abstract_params(cfg)
+    pspec = shd.param_specs(p, cfg, mesh)
+    state_spec = {"trainable": pspec, "mu": pspec, "nu": pspec, "step": P()}
+    bspec = shd.sanitize_tree(shd.batch_spec(cfg, shape, mesh),
+                              abstract_batch(cfg, shape), mesh)
+    return _ns(mesh, state_spec), _ns(mesh, bspec)
+
+
+def serve_param_shardings(cfg: ModelConfig, mesh):
+    # no FSDP at serving time: weights replicated over data, TP over model
+    serve_cfg = cfg.replace(fsdp=False)
+    p = abstract_params(serve_cfg, dtype=jnp.bfloat16)
+    return _ns(mesh, shd.param_specs(p, serve_cfg, mesh))
+
+
+def decode_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    pshard = serve_param_shardings(cfg, mesh)
+    cshape = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    cspec = shd.sanitize_tree(shd.cache_specs(cfg, shape, mesh), cshape, mesh)
+    b_ax, _ = shd.cache_batch_axes(cfg, shape, mesh)
+    tok = shd.sanitize_spec(P(b_ax, None), (shape.global_batch, 1), mesh)
+    return pshard, _ns(mesh, cspec), NamedSharding(mesh, tok)
+
+
+def act_spec_for(cfg: ModelConfig, shape: ShapeSpec, mesh) -> NamedSharding:
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([axis_size(mesh, a) for a in dp]))
+    b = dp if (shape.global_batch % dp_size == 0
+               and shape.global_batch >= dp_size) else None
+    return NamedSharding(mesh, P(b, None, "model"))
+
+
+def sharding_hints_for(cfg: ModelConfig, shape: ShapeSpec, mesh) -> dict:
+    """All activation-sharding hints for one cell (see actctx)."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([axis_size(mesh, a) for a in dp]))
+    b = dp if (shape.global_batch % dp_size == 0
+               and shape.global_batch >= dp_size) else None
+    hints = {"act": NamedSharding(mesh, P(b, None, "model")),
+             # loss chunks are flattened global tokens: batch-sharded rows,
+             # hidden gathered (vocab-parallel unembed)
+             "loss_act": NamedSharding(mesh, P(b, None))}
+    if cfg.moe and cfg.moe.num_experts % axis_size(mesh, "model") == 0:
+        # expert parallelism via shard_map (see moe._moe_ffn_ep)
+        hints["moe_ep_mesh"] = (mesh, axis_size(mesh, "model"))
+    return hints

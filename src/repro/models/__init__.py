@@ -1,0 +1,3 @@
+from repro.models import attention, blocks, layers, lm, mamba2, moe  # noqa: F401
+from repro.models.lm import (decode_step, init_cache, init_params, prefill,  # noqa: F401
+                             train_loss)

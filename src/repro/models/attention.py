@@ -1,0 +1,338 @@
+"""Attention: GQA/MQA/MHA (chunked, flash-style) and MLA (DeepSeek-V2).
+
+Three entry points per variant:
+  *_train(params, cfg, x, ...)            full-sequence, no cache
+  *_prefill(params, cfg, x, cache_len)    full-sequence, returns KV cache
+  *_decode(params, cfg, x, cache, pos)    one new token against the cache
+
+The sequence dimension of the score matrix is never materialised in full for
+long sequences: queries are processed in chunks of ``q_chunk`` via lax.scan
+(online peak memory = one chunk row of scores). MLA decode uses the matrix-
+absorption trick: attention runs directly in the kv_lora latent space so the
+cache stores only (c_kv, k_rope) = (rank + rope_dim) per token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (COMPUTE_DTYPE, apply_rope, dense, glorot,
+                                 rms_norm)
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, KV, D)  [MLA: c_kv (B, S_max, rank)]
+    v: jax.Array  # (B, S_max, KV, D)  [MLA: k_rope (B, S_max, rope_dim)]
+
+
+# ---------------------------------------------------------------------------
+# Core score/softmax/AV with GQA grouping — one q-chunk against full K.
+# ---------------------------------------------------------------------------
+
+def _attend_block(q, k, v, q_pos, k_pos, causal, prefix_len, kv_len=None):
+    """q: (B, qc, H, D); k,v: (B, Sk, KV, Dk|Dv); positions are (qc,), (Sk,).
+
+    Returns (B, qc, H, Dv). GQA grouping happens here without repeating KV.
+    """
+    B, qc, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, qc, KV, G, D)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg.astype(COMPUTE_DTYPE), k.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones((qc, Sk), bool)
+    if causal:
+        cm = q_pos[:, None] >= k_pos[None, :]
+        if prefix_len > 0:  # prefix-LM: prefix tokens are globally visible
+            cm = cm | (k_pos[None, :] < prefix_len)
+        mask = mask & cm
+    if kv_len is not None:  # only the filled part of the cache is valid
+        mask = mask & (k_pos[None, :] < kv_len)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(COMPUTE_DTYPE),
+                     preferred_element_type=COMPUTE_DTYPE)
+    return out.reshape(B, qc, H, v.shape[-1])
+
+
+def chunked_attention(q, k, v, *, causal=True, q_offset=0, prefix_len=0,
+                      q_chunk=512, kv_len=None):
+    """Flash-style attention over q-chunks. q: (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    k_pos = jnp.arange(Sk)
+    if Sq <= q_chunk:
+        q_pos = q_offset + jnp.arange(Sq)
+        return _attend_block(q, k, v, q_pos, k_pos, causal, prefix_len, kv_len)
+    while Sq % q_chunk:  # shrink to the nearest divisor of Sq
+        q_chunk -= 1
+    n = Sq // q_chunk
+    qr = jnp.moveaxis(q.reshape(B, n, q_chunk, H, D), 1, 0)
+
+    def body(_, inp):
+        qi, i = inp
+        q_pos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        return None, _attend_block(qi, k, v, q_pos, k_pos, causal, prefix_len,
+                                   kv_len)
+
+    # nested remat: recompute each chunk's scores/probs in backward instead
+    # of stacking (n, B, H, qc, S) probs to HBM (flash-attention-style
+    # backward; -7 TB/step on deepseek-coder train_4k, see §Perf)
+    body = jax.checkpoint(body)
+    _, out = jax.lax.scan(body, None, (qr, jnp.arange(n)))
+    return jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA attention module
+# ---------------------------------------------------------------------------
+
+def padded_heads(cfg: ModelConfig) -> Tuple[int, int]:
+    """(H', KV') after optional head-group padding (§Perf optimized variants).
+
+    Padding keeps the GQA grouping: each kv group's q-head slots grow from
+    G = H/KV to G' = H'/KV'; the extra slots (and extra kv heads) are
+    zero-initialised so they contribute exactly nothing — the model function
+    is unchanged, but the flat head dims now divide 16-way TP."""
+    H = cfg.pad_heads_to or cfg.num_heads
+    KV = cfg.pad_kv_to or cfg.num_kv_heads
+    assert H % KV == 0, (H, KV)
+    return H, KV
+
+
+def _pad_masks(cfg: ModelConfig):
+    """(q_head_real (H',), kv_head_real (KV',)) boolean masks."""
+    Hp, KVp = padded_heads(cfg)
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    G, Gp = H // KV, Hp // KVp
+    kv_real = jnp.arange(KVp) < KV
+    grp = jnp.arange(Hp) // Gp
+    slot = jnp.arange(Hp) % Gp
+    q_real = (grp < KV) & (slot < G)
+    return q_real, kv_real
+
+
+def init_gqa(key, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    Hp, KVp = padded_heads(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": glorot(ks[0], (d, Hp * hd)),
+        "wk": glorot(ks[1], (d, KVp * hd)),
+        "wv": glorot(ks[2], (d, KVp * hd)),
+        "wo": glorot(ks[3], (Hp * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hp * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((KVp * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((KVp * hd,), jnp.float32)
+    if Hp != cfg.num_heads or KVp != cfg.num_kv_heads:
+        q_real, kv_real = _pad_masks(cfg)
+        qm = jnp.repeat(q_real, hd).astype(jnp.float32)
+        km = jnp.repeat(kv_real, hd).astype(jnp.float32)
+        p["wq"] = p["wq"] * qm
+        p["wk"] = p["wk"] * km
+        p["wv"] = p["wv"] * km
+        p["wo"] = p["wo"] * qm[:, None]
+        if cfg.qkv_bias:
+            p["bq"] = p["bq"] * qm
+            p["bk"] = p["bk"] * km
+            p["bv"] = p["bv"] * km
+    return p
+
+
+def _gqa_qkv(params, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    Hp, KVp = padded_heads(cfg)
+    q = dense(x, params["wq"], params.get("bq")).reshape(B, S, Hp, hd)
+    k = dense(x, params["wk"], params.get("bk")).reshape(B, S, KVp, hd)
+    v = dense(x, params["wv"], params.get("bv")).reshape(B, S, KVp, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _maybe_repeat_kv(cfg: ModelConfig, t):
+    """(B, S, KV', D) -> (B, S, H', D) when attn_repeat_kv (see configs)."""
+    if not cfg.attn_repeat_kv:
+        return t
+    Hp, KVp = padded_heads(cfg)
+    return jnp.repeat(t, Hp // KVp, axis=2)
+
+
+def gqa_train(params, cfg: ModelConfig, x, *, prefix_len=0, q_chunk=512):
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q, k, v = _gqa_qkv(params, cfg, x, positions)
+    out = chunked_attention(q, _maybe_repeat_kv(cfg, k),
+                            _maybe_repeat_kv(cfg, v), causal=cfg.causal,
+                            prefix_len=prefix_len, q_chunk=q_chunk)
+    return dense(out.reshape(B, S, -1), params["wo"])
+
+
+def gqa_prefill(params, cfg: ModelConfig, x, cache_size: int, *,
+                prefix_len=0, q_chunk=512) -> Tuple[jax.Array, KVCache]:
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q, k, v = _gqa_qkv(params, cfg, x, positions)
+    out = chunked_attention(q, _maybe_repeat_kv(cfg, k),
+                            _maybe_repeat_kv(cfg, v), causal=cfg.causal,
+                            prefix_len=prefix_len, q_chunk=q_chunk)
+    hd = cfg.resolved_head_dim
+    KV = padded_heads(cfg)[1]
+    ck = jnp.zeros((B, cache_size, KV, hd), COMPUTE_DTYPE)
+    cv = jnp.zeros((B, cache_size, KV, hd), COMPUTE_DTYPE)
+    cache = KVCache(
+        jax.lax.dynamic_update_slice(ck, k.astype(COMPUTE_DTYPE), (0, 0, 0, 0)),
+        jax.lax.dynamic_update_slice(cv, v.astype(COMPUTE_DTYPE), (0, 0, 0, 0)),
+    )
+    return dense(out.reshape(B, S, -1), params["wo"]), cache
+
+
+def gqa_decode(params, cfg: ModelConfig, x, cache: KVCache, pos) -> Tuple[jax.Array, KVCache]:
+    """x: (B, 1, d); pos: scalar index where the new token lands."""
+    B = x.shape[0]
+    positions = jnp.full((1,), pos)
+    q, k, v = _gqa_qkv(params, cfg, x, positions)
+    ck = jax.lax.dynamic_update_slice(cache.k, k.astype(COMPUTE_DTYPE), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v.astype(COMPUTE_DTYPE), (0, pos, 0, 0))
+    out = _attend_block(q, _maybe_repeat_kv(cfg, ck), _maybe_repeat_kv(cfg, cv),
+                        positions, jnp.arange(ck.shape[1]),
+                        causal=True, prefix_len=0, kv_len=pos + 1)
+    return dense(out.reshape(B, 1, -1), params["wo"]), KVCache(ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_dkv": glorot(ks[1], (d, m.kv_lora_rank + m.qk_rope_head_dim)),
+        "kv_norm": {"scale": jnp.ones((m.kv_lora_rank,), jnp.float32)},
+        "w_uk": glorot(ks[2], (m.kv_lora_rank, H * m.qk_nope_head_dim)),
+        "w_uv": glorot(ks[3], (m.kv_lora_rank, H * m.v_head_dim)),
+        "wo": glorot(ks[4], (H * m.v_head_dim, d)),
+    }
+    if m.q_lora_rank:
+        p["wq_a"] = glorot(ks[0], (d, m.q_lora_rank))
+        p["q_norm"] = {"scale": jnp.ones((m.q_lora_rank,), jnp.float32)}
+        p["wq_b"] = glorot(ks[5], (m.q_lora_rank, H * qk_dim))
+    else:
+        p["wq"] = glorot(ks[0], (d, H * qk_dim))
+    return p
+
+
+def _mla_q(params, cfg, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    if m.q_lora_rank:
+        qa = rms_norm(dense(x, params["wq_a"]), params["q_norm"]["scale"], cfg.norm_eps)
+        q = dense(qa, params["wq_b"])
+    else:
+        q = dense(x, params["wq"])
+    q = q.reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(params, cfg, x, positions):
+    m = cfg.mla
+    ckv_full = dense(x, params["w_dkv"])
+    c_kv, k_rope = jnp.split(ckv_full, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, params["kv_norm"]["scale"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def _mla_expand_kv(params, cfg, c_kv, k_rope):
+    """Materialise per-head K/V from the latent cache (train/prefill path)."""
+    m = cfg.mla
+    B, S = c_kv.shape[:2]
+    H = cfg.num_heads
+    k_nope = dense(c_kv, params["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = dense(c_kv, params["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, H, m.qk_rope_head_dim))
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return k, v
+
+
+def mla_train(params, cfg: ModelConfig, x, *, q_chunk=512, prefix_len=0):
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    c_kv, k_rope = _mla_ckv(params, cfg, x, positions)
+    k, v = _mla_expand_kv(params, cfg, c_kv, k_rope)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = chunked_attention(q, k, v, causal=cfg.causal, q_chunk=q_chunk,
+                            prefix_len=prefix_len)
+    return dense(out.reshape(B, S, -1), params["wo"])
+
+
+def mla_prefill(params, cfg: ModelConfig, x, cache_size: int, *,
+                q_chunk=512) -> Tuple[jax.Array, KVCache]:
+    m = cfg.mla
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    c_kv, k_rope = _mla_ckv(params, cfg, x, positions)
+    k, v = _mla_expand_kv(params, cfg, c_kv, k_rope)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = chunked_attention(q, k, v, causal=True, q_chunk=q_chunk)
+    cc = jnp.zeros((B, cache_size, m.kv_lora_rank), COMPUTE_DTYPE)
+    cr = jnp.zeros((B, cache_size, m.qk_rope_head_dim), COMPUTE_DTYPE)
+    cache = KVCache(
+        jax.lax.dynamic_update_slice(cc, c_kv.astype(COMPUTE_DTYPE), (0, 0, 0)),
+        jax.lax.dynamic_update_slice(cr, k_rope.astype(COMPUTE_DTYPE), (0, 0, 0)),
+    )
+    return dense(out.reshape(B, S, -1), params["wo"]), cache
+
+
+def mla_decode(params, cfg: ModelConfig, x, cache: KVCache, pos) -> Tuple[jax.Array, KVCache]:
+    """Matrix-absorbed decode: attention runs in the kv_lora latent space.
+
+    cache.k = c_kv (B, S, r); cache.v = k_rope (B, S, rope_dim).
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    positions = jnp.full((1,), pos)
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)     # (B,1,H,·)
+    c_kv_new, k_rope_new = _mla_ckv(params, cfg, x, positions)
+    cc = jax.lax.dynamic_update_slice(cache.k, c_kv_new.astype(COMPUTE_DTYPE),
+                                      (0, pos, 0))
+    cr = jax.lax.dynamic_update_slice(cache.v, k_rope_new.astype(COMPUTE_DTYPE),
+                                      (0, pos, 0))
+    # Absorb W_uk into q: q_eff[b,h,r] = sum_n q_nope[b,1,h,n] * W_uk[r, h*n]
+    # (f32 einsums: decode-step FLOPs are negligible; avoids CPU bf16-dot gaps)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(m.qk_nope_head_dim + m.qk_rope_head_dim,
+                                       jnp.float32))
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_eff, cc.astype(jnp.float32))
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                           cr.astype(jnp.float32))) * scale
+    valid = jnp.arange(cc.shape[1])[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhqs,bsr->bqhr", probs, cc.astype(jnp.float32))
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bqhr,rhv->bqhv", out_lat,
+                     w_uv.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    return dense(out.reshape(B, 1, -1), params["wo"]), KVCache(cc, cr)

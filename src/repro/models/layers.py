@@ -1,0 +1,162 @@
+"""Basic building blocks: norms, embeddings, RoPE, MLPs, init helpers.
+
+All modules are plain functions over pytrees of arrays (no framework). Matmuls
+run in ``compute_dtype`` (bf16) with f32 accumulation; norms run in f32.
+Parameter leaves use a *naming convention* that the sharding rules and the
+adapter machinery key off (see repro/launch/sharding.py and repro/core/masks.py):
+
+  wq wk wv wo        attention projections
+  w_up w_gate w_down MLP projections
+  in_proj out_proj   mamba mixer projections
+  w_dkv w_uk w_uv wq_a wq_b  MLA projections
+  emb lm_head        embeddings / unembedding
+  scale bias         norm scale / linear bias (never adapted, never TP-sharded)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast_compute(tree):
+    """Cast >=2D float params to bf16 once per step (mixed precision: f32
+    master weights live in the optimizer; all FSDP gathers / TP collectives
+    then move bf16, halving parameter traffic)."""
+    return jax.tree.map(
+        lambda x: x.astype(COMPUTE_DTYPE)
+        if (hasattr(x, "ndim") and x.ndim >= 2
+            and jnp.issubdtype(x.dtype, jnp.floating)) else x,
+        tree)
+
+
+def pdot(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Matmul in bf16 (MXU accumulates f32 internally on TPU; bf16 output
+    keeps backward cotangents AND row-parallel psums in bf16 — found via the
+    dry-run: f32 outputs made every backward collective 2x, see §Perf)."""
+    return jax.lax.dot_general(
+        x.astype(COMPUTE_DTYPE),
+        w.astype(COMPUTE_DTYPE),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=COMPUTE_DTYPE,
+    )
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    y = pdot(x, w)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(COMPUTE_DTYPE)
+
+
+def init_rms_norm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def glorot(key, shape, in_axis=-2, out_axis=-1, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    fan_out = shape[out_axis]
+    std = math.sqrt(2.0 / (fan_in + fan_out))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def normal_init(key, shape, std=0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (S,) or (..., S). Split-half convention."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # (d/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., :, None, :]           # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str = "silu") -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": glorot(k1, (d_model, d_ff)),
+        "w_down": glorot(k2, (d_ff, d_model)),
+    }
+    if act == "silu":  # SwiGLU
+        p["w_gate"] = glorot(k3, (d_model, d_ff))
+    return p
+
+
+def mlp(params: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    up = dense(x, params["w_up"])
+    if act == "silu":
+        gate = dense(x, params["w_gate"])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(COMPUTE_DTYPE) * up
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    return dense(h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int) -> dict:
+    return {"emb": normal_init(key, (vocab, d_model), std=0.02)}
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["emb"], tokens, axis=0).astype(COMPUTE_DTYPE)
+
+
+def unembed(params: dict, h: jax.Array, tie_to: Optional[jax.Array] = None,
+            softcap: float = 0.0, logical_vocab: int = 0) -> jax.Array:
+    w = tie_to.T if tie_to is not None else params["lm_head"]
+    logits = jax.lax.dot_general(
+        h.astype(COMPUTE_DTYPE), w.astype(COMPUTE_DTYPE),
+        (((h.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    if logical_vocab and logical_vocab < w.shape[-1]:
+        pad_mask = jnp.arange(w.shape[-1]) >= logical_vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits  # f32
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token CE. logits f32 (..., V), labels int (...)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

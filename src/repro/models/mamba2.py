@@ -1,0 +1,273 @@
+"""Mamba2 mixer via SSD (state-space duality), chunked for TPU.
+
+Training / prefill use the chunked SSD algorithm: quadratic attention-like
+compute inside chunks of length ``chunk`` plus an associative scan over chunk
+states (so a 500k-token sequence never materialises an S x S object).
+Decode is the O(1) recurrent update on a (B, H, P, N) state plus a rolling
+depthwise-conv window.
+
+Sharding note (found via the dry-run, recorded in EXPERIMENTS §Perf): the
+reference implementation fuses z/x/B/C/dt into ONE in_proj and slices the
+output. Under tensor parallelism the slice boundaries don't align with the
+shard boundaries, so GSPMD reshards (all-gathers) the full projection every
+layer. We therefore keep SEPARATE projections: in_z / in_x (column-sharded,
+d_inner), in_bc (replicated, 2*g*n is tiny), in_dt (column-sharded, H) —
+depthwise conv splits the same way (conv_x sharded, conv_bc replicated).
+This is numerically identical and shard-aligned end to end.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE, dense, glorot
+
+
+class MambaCache(NamedTuple):
+    ssm: jax.Array      # (B, H, P, N) f32
+    conv_x: jax.Array   # (B, d_conv - 1, d_inner)
+    conv_bc: jax.Array  # (B, d_conv - 1, 2 * g * n)
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    bc_dim = 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, bc_dim
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, bc_dim = dims(cfg)
+    ks = jax.random.split(key, 8)
+    dt = jnp.exp(jax.random.uniform(ks[0], (n_heads,), jnp.float32)
+                 * (math.log(s.dt_max) - math.log(s.dt_min))
+                 + math.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    conv_scale = 1.0 / math.sqrt(s.d_conv)
+    return {
+        "in_z": glorot(ks[1], (d, d_inner)),
+        "in_x": glorot(ks[2], (d, d_inner)),
+        "in_bc": glorot(ks[3], (d, bc_dim)),
+        "in_dt": glorot(ks[4], (d, n_heads)),
+        "conv_x_w": jax.random.normal(ks[5], (s.d_conv, d_inner),
+                                      jnp.float32) * conv_scale,
+        "conv_x_b": jnp.zeros((d_inner,), jnp.float32),
+        "conv_bc_w": jax.random.normal(ks[6], (s.d_conv, bc_dim),
+                                       jnp.float32) * conv_scale,
+        "conv_bc_b": jnp.zeros((bc_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": {"scale": jnp.ones((d_inner,), jnp.float32)},
+        "out_proj": glorot(ks[7], (d_inner, d)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, C); w: (K, C) depthwise. Unrolled over the tiny K."""
+    K = w.shape[0]
+    S = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + S, :] * w[i].astype(x.dtype) for i in range(K))
+    return jax.nn.silu((y + b.astype(x.dtype)).astype(jnp.float32)
+                       ).astype(COMPUTE_DTYPE)
+
+
+def _project(params, cfg, u):
+    """u: (B, S, d) -> z, x_raw, bc_raw, dt  (pre-conv, pre-softplus-dt)."""
+    z = dense(u, params["in_z"])
+    x_raw = dense(u, params["in_x"])
+    bc_raw = dense(u, params["in_bc"])
+    dt_raw = dense(u, params["in_dt"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    return z, x_raw, bc_raw, dt
+
+
+def _gated_out(params, cfg, y, z):
+    """RMSNorm(y * silu(z)) @ out_proj."""
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + cfg.norm_eps) * params["norm"]["scale"]
+    return dense(g.astype(COMPUTE_DTYPE), params["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD
+# ---------------------------------------------------------------------------
+
+def _segsum(x):
+    """x: (..., L) log-decays -> (..., L, L) lower-tri cumulative sums."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(L)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int,
+                initial_state=None) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan. x: (b,s,h,p); dt: (b,s,h); A: (h,); B,C: (b,s,g,n).
+
+    Returns (y: (b,s,h,p), final_state: (b,h,p,n)). Everything f32 inside.
+    """
+    b, s_orig, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    # Pad to a chunk multiple: dt=0 at pad positions => decay 1, no state
+    # update, so the scan semantics are unchanged (pad outputs are sliced off).
+    pad = (-s_orig) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = s_orig + pad
+    nc = s // chunk
+
+    xf = (x.astype(jnp.float32) * dt[..., None])          # X * dt
+    dA = dt * A[None, None, :]                            # (b,s,h) log decays
+    xc = xf.reshape(b, nc, chunk, g, hg, p)
+    dAc = dA.reshape(b, nc, chunk, h)
+    Bc = B.astype(jnp.float32).reshape(b, nc, chunk, g, n)
+    Cc = C.astype(jnp.float32).reshape(b, nc, chunk, g, n)
+
+    dA_cs = jnp.cumsum(dAc, axis=2)                       # (b,nc,l,h)
+
+    # --- intra-chunk (attention-like) ---
+    Ldec = jnp.exp(_segsum(jnp.moveaxis(dAc, 3, 2)))      # (b,nc,h,l,l)
+    Ldec = jnp.moveaxis(Ldec, 2, 4)                       # (b,nc,l,l,h)
+    CB = jnp.einsum("bclgn,bcsgn->bclsg", Cc, Bc)         # (b,nc,l,l,g)
+    att = CB.reshape(b, nc, chunk, chunk, g, 1) * \
+        Ldec.reshape(b, nc, chunk, chunk, g, hg)
+    y_diag = jnp.einsum("bclsgh,bcsghp->bclghp", att, xc)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)   # (b,nc,l,h)
+    dte = decay_to_end.reshape(b, nc, chunk, g, hg)
+    states = jnp.einsum("bclgn,bclgh,bclghp->bcghpn", Bc, dte, xc)
+    states = states.reshape(b, nc, h, p, n)
+
+    # --- associative scan over chunks ---
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])             # (b,nc,h)
+    if initial_state is not None:
+        init = initial_state.astype(jnp.float32)[:, None]  # (b,1,h,p,n)
+        states = jnp.concatenate([init, states], axis=1)
+        chunk_decay = jnp.concatenate(
+            [jnp.ones((b, 1, h), jnp.float32), chunk_decay], axis=1)
+
+    def combine(lhs, rhs):
+        a1, s1 = lhs
+        a2, s2 = rhs
+        return a1 * a2, s2 + a2[..., None, None] * s1
+
+    acc_decay, acc_states = jax.lax.associative_scan(
+        combine, (chunk_decay, states), axis=1)
+    if initial_state is not None:
+        acc_states = acc_states[:, 1:]
+    final_state = acc_states[:, -1]                       # (b,h,p,n)
+    # state entering chunk c = accumulated state through chunk c-1
+    prev = jnp.concatenate(
+        [jnp.zeros_like(acc_states[:, :1]) if initial_state is None
+         else initial_state.astype(jnp.float32)[:, None],
+         acc_states[:, :-1]], axis=1)                     # (b,nc,h,p,n)
+
+    # --- inter-chunk output ---
+    out_decay = jnp.exp(dA_cs).reshape(b, nc, chunk, g, hg)
+    prevg = prev.reshape(b, nc, g, hg, p, n)
+    y_off = jnp.einsum("bclgn,bclgh,bcghpn->bclghp", Cc, out_decay, prevg)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)[:, :s_orig]
+    return y.astype(COMPUTE_DTYPE), final_state
+
+
+# ---------------------------------------------------------------------------
+# Module entry points
+# ---------------------------------------------------------------------------
+
+def _ssd_from_parts(params, cfg, xBC_x, xBC_bc, dt, B_, S_):
+    s = cfg.ssm
+    d_inner, n_heads, bc_dim = dims(cfg)
+    x = xBC_x.reshape(B_, S_, n_heads, s.head_dim)
+    gn = s.n_groups * s.d_state
+    Bm = xBC_bc[..., :gn].reshape(B_, S_, s.n_groups, s.d_state)
+    Cm = xBC_bc[..., gn:].reshape(B_, S_, s.n_groups, s.d_state)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, final_state = ssd_chunked(x, dt, A, Bm, Cm, s.chunk)
+    y = y + (params["D"].astype(jnp.float32)[None, None, :, None]
+             * x.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    return y, final_state
+
+
+def mamba_train(params, cfg: ModelConfig, u):
+    d_inner, _, _ = dims(cfg)
+    B_, S_, _ = u.shape
+    z, x_raw, bc_raw, dt = _project(params, cfg, u)
+    xx = _causal_conv(x_raw, params["conv_x_w"], params["conv_x_b"])
+    bc = _causal_conv(bc_raw, params["conv_bc_w"], params["conv_bc_b"])
+    y, _ = _ssd_from_parts(params, cfg, xx, bc, dt, B_, S_)
+    return _gated_out(params, cfg, y.reshape(B_, S_, d_inner), z)
+
+
+def mamba_prefill(params, cfg: ModelConfig, u) -> Tuple[jax.Array, MambaCache]:
+    s = cfg.ssm
+    d_inner, _, _ = dims(cfg)
+    B_, S_, _ = u.shape
+    z, x_raw, bc_raw, dt = _project(params, cfg, u)
+    conv_x_state = x_raw[:, S_ - (s.d_conv - 1):, :].astype(COMPUTE_DTYPE)
+    conv_bc_state = bc_raw[:, S_ - (s.d_conv - 1):, :].astype(COMPUTE_DTYPE)
+    xx = _causal_conv(x_raw, params["conv_x_w"], params["conv_x_b"])
+    bc = _causal_conv(bc_raw, params["conv_bc_w"], params["conv_bc_b"])
+    y, final_state = _ssd_from_parts(params, cfg, xx, bc, dt, B_, S_)
+    out = _gated_out(params, cfg, y.reshape(B_, S_, d_inner), z)
+    return out, MambaCache(ssm=final_state, conv_x=conv_x_state,
+                           conv_bc=conv_bc_state)
+
+
+def _conv_step(window, new, w, b):
+    """window: (B, K-1, C); new: (B, 1, C) -> (out (B, C), new window)."""
+    win = jnp.concatenate([window, new.astype(window.dtype)], axis=1)
+    out = jnp.sum(win.astype(jnp.float32) * w.astype(jnp.float32)[None],
+                  axis=1) + b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(COMPUTE_DTYPE), win[:, 1:]
+
+
+def mamba_decode(params, cfg: ModelConfig, u,
+                 cache: MambaCache, pos) -> Tuple[jax.Array, MambaCache]:
+    """u: (B, 1, d)."""
+    s = cfg.ssm
+    d_inner, n_heads, bc_dim = dims(cfg)
+    B_ = u.shape[0]
+    z, x_raw, bc_raw, dt = _project(params, cfg, u)    # (B,1,·)
+    xx, new_conv_x = _conv_step(cache.conv_x, x_raw,
+                                params["conv_x_w"], params["conv_x_b"])
+    bc, new_conv_bc = _conv_step(cache.conv_bc, bc_raw,
+                                 params["conv_bc_w"], params["conv_bc_b"])
+
+    x = xx.reshape(B_, n_heads, s.head_dim)
+    gn = s.n_groups * s.d_state
+    Bm = bc[:, :gn].reshape(B_, s.n_groups, s.d_state)
+    Cm = bc[:, gn:].reshape(B_, s.n_groups, s.d_state)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt1 = dt[:, 0]                                     # (B,H)
+    dA = jnp.exp(dt1 * A[None])                        # (B,H)
+    hg = n_heads // s.n_groups
+    Bh = jnp.repeat(Bm, hg, axis=1)                    # (B,H,N)
+    Ch = jnp.repeat(Cm, hg, axis=1)
+    xdt = x.astype(jnp.float32) * dt1[..., None]       # (B,H,P)
+    new_state = cache.ssm * dA[..., None, None] \
+        + xdt[..., :, None] * Bh.astype(jnp.float32)[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B_, 1, d_inner).astype(COMPUTE_DTYPE)
+    out = _gated_out(params, cfg, y, z)
+    return out, MambaCache(ssm=new_state, conv_x=new_conv_x,
+                           conv_bc=new_conv_bc)

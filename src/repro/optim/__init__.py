@@ -1,0 +1,2 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,  # noqa: F401
+                               global_norm, lr_schedule)

@@ -1,0 +1,96 @@
+"""AdamW over arbitrary trainable pytrees + LR schedules.
+
+The *same* optimizer serves dense training and every adapter mode, because
+the trainable tree already reflects the mode:
+
+  * full / hook-mode SHiRA : trainable = the model parameters. Hook mode
+    Hadamard-masks the grads (paper App. C) — moments stay dense.
+  * packed SHiRA (App. D)  : trainable = (…, K) packed values, so the
+    moments are packed too — that is the paper's 16% peak-memory saving,
+    and under data parallelism the gradient all-reduce is over the packed
+    values only (our beyond-paper collective compression; see EXPERIMENTS
+    §Perf).
+  * LoRA / DoRA            : trainable = {A, B[, m]} factor trees.
+
+``sparse_adamw`` in repro/kernels fuses the packed update into one Pallas
+kernel; this module is the reference implementation used under jit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(trainable) -> AdamWState:
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), t)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(trainable),
+                      nu=zeros(trainable))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves))) if leaves else jnp.zeros(())
+
+
+def adamw_update(grads, state: AdamWState, trainable, tcfg: TrainConfig,
+                 lr: jax.Array) -> Tuple[Any, AdamWState, dict]:
+    gnorm = global_norm(grads)
+    if tcfg.grad_clip > 0:
+        scale = jnp.minimum(1.0, tcfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    b1, b2 = tcfg.beta1, tcfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + tcfg.eps)
+        if tcfg.weight_decay:
+            delta = delta + tcfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat = jax.tree.map(upd, grads, state.mu, state.nu, trainable)
+    new_p = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm}
+
+
+def lr_schedule(tcfg: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    base = tcfg.learning_rate
+    warm = max(tcfg.warmup_steps, 1)
+    total = max(tcfg.total_steps, warm + 1)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm_lr = base * (s + 1.0) / warm
+        frac = jnp.clip((s - warm) / (total - warm), 0.0, 1.0)
+        if tcfg.schedule == "cosine":
+            post = base * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        elif tcfg.schedule == "linear":
+            post = base * (1.0 - frac)
+        else:
+            post = jnp.full_like(s, base)
+        return jnp.where(s < warm, warm_lr, post)
+
+    return fn

@@ -1,0 +1,3 @@
+from repro.runtime.ft import (SimulatedPreemption, StragglerMonitor,  # noqa: F401
+                              StragglerReport)
+from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: F401

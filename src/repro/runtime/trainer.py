@@ -1,0 +1,187 @@
+"""The trainer: adapter-aware, preemption-safe, checkpointed train loop.
+
+One Trainer serves every mode:
+
+  adapter.kind == "none"          -> full finetuning (trainable = params)
+  adapter.kind == "shira", packed -> paper App. D: trainable = packed values
+  adapter.kind == "shira", hook   -> paper App. C: trainable = params,
+                                     gradients Hadamard-masked
+  adapter.kind in lora/dora/...   -> factor trees
+
+The jitted step is pure: (state, batch, masks?) -> (state, metrics); all
+fault-tolerance (checkpoint cadence, preemption recovery, straggler
+monitoring) lives in the host loop around it.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import RunConfig
+from repro.data import batch_iterator
+from repro.models import lm
+from repro.optim import adamw_init, adamw_update, lr_schedule
+from repro.runtime.ft import SimulatedPreemption, StragglerMonitor
+
+
+@dataclass
+class TrainerConfig:
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    adapter_only_ckpt: bool = True   # packed adapters are ~1-2% of the model
+
+
+class Trainer:
+    def __init__(self, run: RunConfig, tcfg: TrainerConfig = TrainerConfig(),
+                 init_key: int = 0, calib_grads=None, base_params=None):
+        self.run = run
+        self.tcfg = tcfg
+        self.cfg = run.model
+        self.acfg = run.adapter
+        key = jax.random.PRNGKey(init_key)
+        self.base = (base_params if base_params is not None
+                     else lm.init_params(self.cfg, key))
+        self.hook_mode = (self.acfg.kind == "shira" and not self.acfg.packed)
+
+        if self.acfg.kind == "none":
+            self.trainable0, self.aux = self.base, None
+            self.frozen = None
+        elif self.hook_mode:
+            self.trainable0 = self.base
+            self.masks = core.make_dense_masks(self.base, self.acfg, key,
+                                               calib_grads)
+            self.aux = None
+            self.frozen = None
+        else:
+            self.trainable0, self.aux = core.init_adapter(
+                key, self.base, self.acfg, calib_grads)
+            self.frozen = self.base
+        self.schedule = lr_schedule(run.train)
+        self._step_fn = None
+        self.monitor = StragglerMonitor(n_hosts=1)
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir, tcfg.keep)
+                     if tcfg.ckpt_dir else None)
+
+    # -- state ---------------------------------------------------------------
+
+    def init_state(self) -> Dict[str, Any]:
+        opt = adamw_init(self.trainable0)
+        return {"trainable": self.trainable0, "mu": opt.mu, "nu": opt.nu,
+                "step": jnp.zeros((), jnp.int32)}
+
+    # -- the pure step --------------------------------------------------------
+
+    def _materialize(self, trainable):
+        if self.acfg.kind == "none" or self.hook_mode:
+            return trainable
+        return core.materialize(self.frozen, trainable, self.aux, self.acfg,
+                                alpha=1.0)
+
+    def build_step(self) -> Callable:
+        cfg, run, acfg = self.cfg, self.run, self.acfg
+        hook = self.hook_mode
+        masks = self.masks if hook else None
+
+        def step_fn(state, batch):
+            lr = self.schedule(state["step"])
+
+            def loss_fn(trainable):
+                eff = self._materialize(trainable)
+                loss, metrics = lm.train_loss(eff, cfg, batch)
+                return loss, metrics
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state["trainable"])
+            if hook:
+                grads = core.mask_grads(grads, masks)
+            from repro.optim.adamw import AdamWState
+            new_t, opt, om = adamw_update(
+                grads, AdamWState(state["step"], state["mu"], state["nu"]),
+                state["trainable"], run.train, lr)
+            new_state = {"trainable": new_t, "mu": opt.mu, "nu": opt.nu,
+                         "step": opt.step}
+            metrics = {**metrics, **om, "loss": loss, "lr": lr}
+            return new_state, metrics
+
+        return jax.jit(step_fn, donate_argnums=(0,))
+
+    # -- host loop ------------------------------------------------------------
+
+    def fit(self, steps: int, batches: Optional[Iterator] = None,
+            state: Optional[dict] = None, resume: bool = True,
+            fault_injector: Optional[Callable[[int], None]] = None,
+            log: Optional[Callable[[str], None]] = print) -> Dict[str, Any]:
+        if self._step_fn is None:
+            self._step_fn = self.build_step()
+        if batches is None:
+            batches = batch_iterator(self.cfg, self.run.shape,
+                                     seed=self.run.train.seed)
+        state = state or self.init_state()
+        start = 0
+        if resume and self.ckpt and self.ckpt.latest_step() is not None:
+            restored = self.ckpt.restore({"state": state})
+            state, start = restored["state"], restored["step"]
+            if log:
+                log(f"[trainer] resumed from step {start}")
+
+        history = []
+        it = iter(batches)
+        # skip already-consumed batches deterministically on resume
+        for _ in range(start):
+            next(it)
+        s = start
+        while s < steps:
+            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            t0 = time.perf_counter()
+            try:
+                if fault_injector is not None:
+                    fault_injector(s)
+                state, metrics = self._step_fn(state, batch)
+                jax.block_until_ready(metrics["loss"])
+            except SimulatedPreemption:
+                if not self.ckpt or self.ckpt.latest_step() is None:
+                    # restart from scratch
+                    state = self.init_state()
+                    it = iter(batch_iterator(self.cfg, self.run.shape,
+                                             seed=self.run.train.seed))
+                    s = 0
+                    if log:
+                        log("[trainer] preempted, no checkpoint: restarting")
+                    continue
+                restored = self.ckpt.restore({"state": state})
+                state, s = restored["state"], restored["step"]
+                it = iter(batch_iterator(self.cfg, self.run.shape,
+                                         seed=self.run.train.seed,
+                                         start_step=s))
+                if log:
+                    log(f"[trainer] preempted: restored step {s}")
+                continue
+            dt = time.perf_counter() - t0
+            self.monitor.record(0, dt)
+            history.append({k: float(v) for k, v in metrics.items()})
+            if log and (s % self.tcfg.log_every == 0 or s == steps - 1):
+                log(f"[trainer] step {s:5d} loss={history[-1]['loss']:.4f} "
+                    f"lr={history[-1]['lr']:.2e} {dt*1e3:.0f}ms")
+            s += 1
+            if self.ckpt and (s % self.tcfg.ckpt_every == 0 or s == steps):
+                self.ckpt.save(s, {"state": state}, meta={"arch": self.cfg.name})
+        return {"state": state, "history": history}
+
+    # -- adapter export --------------------------------------------------------
+
+    def export_pack(self, state, name: str = "adapter") -> core.AdapterPack:
+        if self.acfg.kind == "shira" and not self.hook_mode:
+            return core.pack_from_shira(name, state["trainable"], self.aux)
+        if self.hook_mode:
+            return core.pack_from_delta(name, self.base, state["trainable"],
+                                        self.acfg)
+        raise ValueError(f"pack export is for SHiRA; kind={self.acfg.kind}")

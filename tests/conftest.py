@@ -1,0 +1,6 @@
+# NOTE: deliberately NO xla_force_host_platform_device_count here — tests
+# must see the 1 real CPU device; only repro.launch.dryrun forces 512.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,155 @@
+"""Fault tolerance: checkpointing, preemption recovery, stragglers,
+elastic re-mesh restore."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_tree, save_tree
+from repro.configs import AdapterConfig, RunConfig, TrainConfig, get_smoke_config
+from repro.configs.base import ShapeSpec
+from repro.runtime import SimulatedPreemption, StragglerMonitor, Trainer
+from repro.runtime.trainer import TrainerConfig
+
+
+def test_checkpoint_keep_k_and_commit_marker():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        tree = {"x": jnp.arange(4.0)}
+        for s in (10, 20, 30, 40):
+            mgr.save(s, {"state": tree})
+        assert mgr.steps() == [30, 40]
+        # an uncommitted dir must be invisible
+        os.makedirs(os.path.join(d, "step_00000099"))
+        assert mgr.latest_step() == 40
+
+
+def test_checkpoint_restore_dtype_and_shape_guard():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"w": jnp.ones((4, 4), jnp.float32)}
+        save_tree(tree, d)
+        out = restore_tree({"w": jnp.zeros((4, 4), jnp.float32)}, d)
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.ones((4, 4)))
+        with pytest.raises(ValueError):
+            restore_tree({"w": jnp.zeros((2, 2), jnp.float32)}, d)
+        with pytest.raises(KeyError):
+            restore_tree({"nope": jnp.zeros((4, 4))}, d)
+
+
+def _mk_run(steps=20):
+    return RunConfig(
+        model=get_smoke_config("starcoder2-7b"),
+        shape=ShapeSpec("tiny", 64, 4, "train"),
+        adapter=AdapterConfig(kind="shira", mask="wm", sparsity=0.95),
+        train=TrainConfig(learning_rate=5e-3, total_steps=steps,
+                          warmup_steps=2))
+
+
+def test_preemption_recovery_is_deterministic():
+    run = _mk_run()
+    with tempfile.TemporaryDirectory() as d1:
+        t1 = Trainer(run, TrainerConfig(ckpt_dir=d1, ckpt_every=5,
+                                        log_every=1000))
+        clean = t1.fit(12, log=None)
+    hits = {"n": 0}
+
+    def injector(s):
+        if s == 8 and hits["n"] == 0:
+            hits["n"] += 1
+            raise SimulatedPreemption()
+
+    with tempfile.TemporaryDirectory() as d2:
+        t2 = Trainer(run, TrainerConfig(ckpt_dir=d2, ckpt_every=5,
+                                        log_every=1000))
+        resumed = t2.fit(12, fault_injector=injector, log=None)
+    assert hits["n"] == 1
+    assert abs(clean["history"][-1]["loss"]
+               - resumed["history"][-1]["loss"]) < 1e-6
+
+
+def test_straggler_monitor_flags_and_rebalances():
+    mon = StragglerMonitor(n_hosts=8, z_thresh=2.0, min_ratio=1.2)
+    for step in range(10):
+        for h in range(8):
+            mon.record(h, 1.0 if h != 3 else 3.0)  # host 3 is 3x slower
+        rep = mon.end_step()
+    assert rep.stragglers == [3]
+    plan = mon.rebalance_plan(rep, shards_per_host=4)
+    assert sum(plan.values()) == 32
+    assert plan[3] < plan[0], "straggler must get less work"
+
+
+def test_straggler_monitor_quiet_on_healthy_fleet():
+    mon = StragglerMonitor(n_hosts=8)
+    rng = np.random.RandomState(0)
+    for step in range(10):
+        for h in range(8):
+            mon.record(h, 1.0 + rng.rand() * 0.05)
+        rep = mon.end_step()
+    assert rep.healthy
+
+
+def test_bounded_barrier():
+    from repro.runtime.ft import BoundedBarrier
+    b = BoundedBarrier(timeout_s=10.0, grace_ratio=5.0)
+    assert not b.should_abort(waited_s=2.0, fleet_mean_step_s=1.0)
+    assert b.should_abort(waited_s=6.0, fleet_mean_step_s=1.0)
+    assert b.should_abort(waited_s=11.0, fleet_mean_step_s=100.0)
+
+
+ELASTIC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, tempfile, json
+import jax, jax.numpy as jnp, numpy as np
+sys.path.insert(0, "src")
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import save_tree, restore_tree
+from repro.launch.mesh import make_mesh
+
+d = sys.argv[1]
+tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+# save from a (4,2) mesh
+m1 = make_mesh((4, 2), ("data", "model"))
+t1 = jax.device_put(tree, NamedSharding(m1, P("data", "model")))
+save_tree(t1, d)
+# restore onto a DIFFERENT (2,4) mesh -> elastic re-scale
+m2 = make_mesh((2, 4), ("data", "model"))
+sh = {"w": NamedSharding(m2, P("data", "model"))}
+out = restore_tree(tree, d, shardings=sh)
+assert out["w"].sharding.mesh.shape["model"] == 4
+np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(64.0).reshape(8, 8))
+print("ELASTIC_OK")
+"""
+
+
+def test_elastic_remesh_restore():
+    """Save on mesh (4,2), restore onto mesh (2,4) — in a subprocess so the
+    forced device count never leaks into this test session."""
+    with tempfile.TemporaryDirectory() as d:
+        out = subprocess.run(
+            [sys.executable, "-c", ELASTIC_SCRIPT, d],
+            capture_output=True, text=True, cwd=os.path.dirname(
+                os.path.dirname(os.path.abspath(__file__))))
+        assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_adapter_only_checkpoint_is_small():
+    run = _mk_run()
+    t = Trainer(run, TrainerConfig())
+    state = t.init_state()
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(0, {"adapter": state["trainable"]})
+        adapter_bytes = sum(
+            os.path.getsize(os.path.join(r, f))
+            for r, _, fs in os.walk(d) for f in fs)
+    model_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(t.base))
+    assert adapter_bytes < 0.25 * model_bytes

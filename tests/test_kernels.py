@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles, swept over shapes/dtypes
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("shape,bn,bm", [
+    ((256, 256), 128, 128),
+    ((512, 768), 256, 256),
+    ((384, 512), 128, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("alpha", [1.0, -1.0, 0.5])
+def test_scatter_apply(shape, bn, bm, dtype, alpha):
+    rng = np.random.RandomState(hash((shape, str(dtype))) % 2**31)
+    n, m = shape
+    k = max(int(0.02 * n * m), 4)
+    w = jnp.asarray(rng.randn(n, m), dtype)
+    idx = np.unique(rng.randint(0, n * m, 2 * k))[:k]
+    vals = rng.randn(len(idx)).astype(np.float32)
+    counts, rows, cols, vbuf = ops.bucket_updates(idx, vals, n, m, bn=bn, bm=bm)
+    out = ops.scatter_apply(w, jnp.asarray(counts), jnp.asarray(rows),
+                            jnp.asarray(cols), jnp.asarray(vbuf), alpha,
+                            bn=bn, bm=bm, interpret=True)
+    want = ref.scatter_apply_ref(w, jnp.asarray(idx), jnp.asarray(vals), alpha)
+    tol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_scatter_apply_empty_tiles_untouched():
+    """Struct-style masks: tiles without updates must be bit-identical."""
+    rng = np.random.RandomState(0)
+    n, m, bn, bm = 512, 512, 256, 256
+    w = jnp.asarray(rng.randn(n, m), jnp.float32)
+    # updates only in the top-left tile
+    idx = (rng.randint(0, bn, 50) * m + rng.randint(0, bm, 50)).astype(np.int64)
+    idx = np.unique(idx)
+    vals = rng.randn(len(idx)).astype(np.float32)
+    counts, rows, cols, vbuf = ops.bucket_updates(idx, vals, n, m, bn=bn, bm=bm)
+    assert counts[0, 0] == len(idx) and counts[1, 1] == 0
+    out = ops.scatter_apply(w, jnp.asarray(counts), jnp.asarray(rows),
+                            jnp.asarray(cols), jnp.asarray(vbuf), 1.0,
+                            bn=bn, bm=bm, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out[bn:, bm:]),
+                                  np.asarray(w[bn:, bm:]))
+
+
+def test_scatter_load_unload_roundtrip():
+    rng = np.random.RandomState(1)
+    n = m = 512
+    w = jnp.asarray(rng.randn(n, m), jnp.float32)
+    idx = np.unique(rng.randint(0, n * m, 4000))
+    vals = rng.randn(len(idx)).astype(np.float32)
+    args = [jnp.asarray(a) for a in ops.bucket_updates(idx, vals, n, m)]
+    loaded = ops.scatter_apply(w, *args, 1.0, interpret=True)
+    restored = ops.scatter_apply(loaded, *args, -1.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(restored), np.asarray(w), atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(256, 256), (512, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_update(shape, dtype):
+    rng = np.random.RandomState(2)
+    n, m = shape
+    w = jnp.asarray(rng.randn(n, m), dtype)
+    mask = jnp.asarray(rng.rand(n, m) < 0.02, jnp.float32)
+    vals = jnp.asarray(rng.randn(n, m), jnp.float32)
+    out = ops.masked_update(w, mask, vals, 1.5, interpret=True)
+    want = ref.masked_update_ref(w, mask, vals, 1.5)
+    tol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("k", [100, 2048, 5000])
+@pytest.mark.parametrize("step", [1, 7])
+def test_sparse_adamw(k, step):
+    rng = np.random.RandomState(3)
+    v = jnp.asarray(rng.randn(k), jnp.float32)
+    g = jnp.asarray(rng.randn(k), jnp.float32)
+    mu = jnp.asarray(rng.rand(k), jnp.float32)
+    nu = jnp.asarray(rng.rand(k), jnp.float32)
+    out = ops.sparse_adamw(v, g, mu, nu, jnp.asarray(step), lr=1e-2, wd=0.01,
+                           interpret=True)
+    want = ref.sparse_adamw_ref(v, g, mu, nu, lr=1e-2, b1=0.9, b2=0.999,
+                                eps=1e-8, wd=0.01, step=step)
+    for a, b in zip(out, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("B,KV,G,D,S,sb", [
+    (1, 1, 1, 64, 512, 256),
+    (2, 2, 4, 64, 1024, 512),
+    (2, 1, 8, 128, 768, 256),   # MQA w/ padding (768 % 256 == 0)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode(B, KV, G, D, S, sb, dtype):
+    rng = np.random.RandomState(4)
+    q = jnp.asarray(rng.randn(B, KV, G, D), dtype)
+    k = jnp.asarray(rng.randn(B, S, KV, D), dtype)
+    v = jnp.asarray(rng.randn(B, S, KV, D), dtype)
+    kv_len = S - 100
+    out = ops.flash_decode(q, k, v, kv_len, sb=sb, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, kv_len)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_decode_matches_model_attention():
+    """Cross-check the kernel against the model's decode attention path."""
+    from repro.models.attention import _attend_block
+    rng = np.random.RandomState(5)
+    B, KV, G, D, S = 2, 2, 2, 64, 512
+    H = KV * G
+    q4 = jnp.asarray(rng.randn(B, 1, H, D), jnp.float32)
+    k4 = jnp.asarray(rng.randn(B, S, KV, D), jnp.float32)
+    v4 = jnp.asarray(rng.randn(B, S, KV, D), jnp.float32)
+    kv_len = 300
+    model_out = _attend_block(q4, k4, v4, jnp.array([kv_len - 1]),
+                              jnp.arange(S), causal=True, prefix_len=0,
+                              kv_len=kv_len)  # (B, 1, H, D)
+    qk = q4[:, 0].reshape(B, KV, G, D)
+    kern = ops.flash_decode(qk, k4, v4, kv_len, sb=256, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(kern.reshape(B, H, D), np.float32),
+        np.asarray(model_out[:, 0], np.float32), atol=2e-2, rtol=2e-2)

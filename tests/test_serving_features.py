@@ -1,0 +1,112 @@
+"""flash_prefill kernel, int8 KV cache, gradient accumulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.serving import (cache_bytes, dequantize_kv, quant_cache_zeros,
+                           quantize_kv, update_quant_cache)
+
+
+@pytest.mark.parametrize("B,H,KV,D,Sq,bq,bkv", [
+    (1, 2, 2, 64, 512, 256, 256),
+    (2, 4, 2, 64, 512, 128, 256),
+    (1, 8, 1, 128, 384, 128, 128),   # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_vs_ref(B, H, KV, D, Sq, bq, bkv, dtype):
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(B, Sq, H, D), dtype)
+    k = jnp.asarray(rng.randn(B, Sq, KV, D), dtype)
+    v = jnp.asarray(rng.randn(B, Sq, KV, D), dtype)
+    out = ops.flash_prefill(q, k, v, bq=bq, bkv=bkv, interpret=True)
+    want = ref.flash_prefill_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_prefill_matches_model_chunked_attention():
+    from repro.models.attention import chunked_attention
+    rng = np.random.RandomState(1)
+    B, Sq, H, KV, D = 1, 256, 4, 2, 32
+    q = jnp.asarray(rng.randn(B, Sq, H, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, Sq, KV, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, Sq, KV, D), jnp.float32)
+    model = chunked_attention(q, k, v, causal=True, q_chunk=64)
+    kern = ops.flash_prefill(q, k, v, bq=64, bkv=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(kern, np.float32),
+                               np.asarray(model, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_int8_kv_roundtrip_error():
+    rng = np.random.RandomState(2)
+    k = jnp.asarray(rng.randn(2, 128, 4, 64), jnp.bfloat16)
+    qk = quantize_kv(k)
+    deq = dequantize_kv(qk)
+    rel = float(jnp.max(jnp.abs(deq.astype(jnp.float32)
+                                - k.astype(jnp.float32)))) / \
+        float(jnp.max(jnp.abs(k.astype(jnp.float32))))
+    assert rel < 0.02, rel
+    assert qk.codes.dtype == jnp.int8
+
+
+def test_int8_kv_attention_error_small():
+    """End-to-end: attention over a quantized cache stays within 1%."""
+    rng = np.random.RandomState(3)
+    B, S, KV, G, D = 1, 256, 2, 2, 64
+    q = jnp.asarray(rng.randn(B, KV, G, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, KV, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, KV, D), jnp.float32)
+    exact = ref.flash_decode_ref(q, k, v, S)
+    kq = dequantize_kv(quantize_kv(k)).astype(jnp.float32)
+    vq = dequantize_kv(quantize_kv(v)).astype(jnp.float32)
+    approx = ref.flash_decode_ref(q, kq, vq, S)
+    rel = float(jnp.max(jnp.abs(approx - exact))) / \
+        (float(jnp.max(jnp.abs(exact))) + 1e-9)
+    assert rel < 0.01, rel
+
+
+def test_quant_cache_update():
+    cache = quant_cache_zeros((1, 16, 2, 8))
+    new = jnp.ones((1, 1, 2, 8), jnp.bfloat16) * 3.0
+    cache = update_quant_cache(cache, new, 5)
+    deq = dequantize_kv(cache)
+    np.testing.assert_allclose(np.asarray(deq[0, 5], np.float32), 3.0,
+                               rtol=0.02)
+    assert float(jnp.sum(jnp.abs(deq[0, :5].astype(jnp.float32)))) == 0.0
+
+
+def test_quant_cache_halves_bytes():
+    shape = (128, 32768, 40, 128)
+    assert cache_bytes(shape, quant=True) < 0.52 * cache_bytes(shape, False)
+
+
+def test_grad_accumulation_matches_full_batch():
+    """microbatch=4 must give (numerically) the same update as one batch."""
+    from repro.configs import TrainConfig, get_smoke_config
+    from repro.launch.steps import make_train_step, abstract_train_state
+    from repro.models import lm
+    cfg = get_smoke_config("starcoder2-7b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    state = {"trainable": params,
+             "mu": jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params),
+             "nu": jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params),
+             "step": jnp.zeros((), jnp.int32)}
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0,
+                                          cfg.vocab_size)}
+    s1, m1 = jax.jit(make_train_step(cfg, TrainConfig(microbatch=0)))(
+        jax.tree.map(lambda x: x, state), batch)
+    s4, m4 = jax.jit(make_train_step(cfg, TrainConfig(microbatch=4)))(
+        jax.tree.map(lambda x: x, state), batch)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 5e-3
+    for a, b in zip(jax.tree.leaves(s1["trainable"]),
+                    jax.tree.leaves(s4["trainable"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-3, rtol=5e-2)
