@@ -1,0 +1,81 @@
+"""Multi-tenant serving: every request brings its own SHiRA adapter.
+
+The sequential demo (examples/multi_adapter_serving.py) switches the ONE
+deployed model between adapters — requests for different tenants can never
+share a batch. This demo serves a mixed-tenant request batch in a single
+forward pass: the base weights stay shared, and each request's sparse
+adapter delta rides along as a batched side term computed by the Pallas
+``sidedelta`` kernel (y[b] += x[b] @ dW_adapter(b)).
+
+It then streams skewed traffic so the ``FusedLRU`` scheduler promotes the
+hot adapter INTO the shared base (one sparse scatter) and serves the rest
+with diff packs — and finally verifies both paths agree with sequential
+switching, token for token.
+
+  PYTHONPATH=src python examples/multi_tenant_serving.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.configs import AdapterConfig, get_smoke_config
+from repro.core.switching import FusedLRU
+from repro.models import layers, lm
+from repro.serving import MultiTenantEngine
+
+cfg = get_smoke_config("starcoder2-7b")
+
+# f32 so the parity printout is exact rather than bf16-fuzzy
+with layers.compute_precision(jnp.float32):
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+
+    print("== registering 3 tenants (synthetic SHiRA packs, 2% dense) ==")
+    acfg = AdapterConfig(kind="shira", mask="rand", sparsity=0.98,
+                         target_modules=("wq", "wk", "wv", "wo",
+                                         "w_up", "w_gate", "w_down"))
+    packs = []
+    for i in range(3):
+        sub = jax.random.fold_in(jax.random.PRNGKey(7), i)
+        values, aux = core.init_adapter(sub, params, acfg)
+        values = jax.tree.map(
+            lambda v: None if v is None
+            else 0.05 * jax.random.normal(sub, v.shape), values,
+            is_leaf=lambda x: x is None)
+        packs.append(core.pack_from_shira(f"tenant_{i}", values, aux))
+    engine = MultiTenantEngine(cfg, params, scheduler=FusedLRU())
+    for p in packs:
+        engine.register(p)
+        print(f"  {p.name}: {p.num_params()} sparse entries "
+              f"({p.nbytes() / 1e3:.0f}KB)")
+
+    B, S, T = 6, 16, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    names = ["tenant_0", "tenant_2", None, "tenant_1", "tenant_0",
+             "tenant_2"]
+
+    print("\n== one batch, four tenants (incl. base), one forward pass ==")
+    out_mt, dt = engine.generate({"tokens": toks}, names, T)
+    print(f"  {B}x{T} tokens in {dt * 1e3:.0f}ms "
+          f"({B * T / dt:.1f} tok/s), 0 weight switches")
+
+    # sequential reference: switch -> serve, one request at a time
+    from repro.serving.multitenant import switch_per_request_reference
+    seq, _, dt_seq = switch_per_request_reference(cfg, params, packs, toks,
+                                                  names, T)
+    same = np.array_equal(np.asarray(out_mt), seq)
+    print(f"  sequential switching: {dt_seq * 1e3:.0f}ms, "
+          f"{len([n for n in names if n])} switches — tokens equal: {same}")
+
+    print("\n== skewed traffic: the scheduler fuses the hot tenant ==")
+    for step in range(3):
+        hot = ["tenant_1"] * 4 + ["tenant_0", None]
+        out, dt = engine.generate({"tokens": toks}, hot, T)
+        print(f"  batch {step}: fused={engine.fused} "
+              f"({engine.fuse_transitions} transitions) "
+              f"{B * T / dt:.1f} tok/s")
+    assert engine.fused == "tenant_1"
+    out_fused, _ = engine.generate({"tokens": toks}, names, T)
+    print(f"  mixed batch with tenant_1 fused — tokens still equal: "
+          f"{np.array_equal(np.asarray(out_fused), np.asarray(out_mt))}")

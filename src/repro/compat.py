@@ -1,0 +1,24 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+The repo targets the newest jax API surface, but the CPU CI container pins
+an older jaxlib. Gate — don't vendor — the moved symbols here so call sites
+stay on the modern spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """jax.shard_map (new) vs jax.experimental.shard_map.shard_map (old).
+
+    The old API spells ``check_vma`` as ``check_rep``; semantics match for
+    the False we pass.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -63,7 +63,10 @@ def fuse_packs(packs: List[AdapterPack], weights=None,
     duplicate coordinates merged (so loading it == loading all of them)."""
     weights = weights or [1.0] * len(packs)
     entries = {}
-    for path in packs[0].entries:
+    paths = []                      # union over packs, first-seen order
+    for p in packs:
+        paths.extend(k for k in p.entries if k not in paths)
+    for path in paths:
         idx_list, val_list = [], []
         for p, w in zip(packs, weights):
             if path not in p.entries:

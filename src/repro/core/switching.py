@@ -127,6 +127,89 @@ class LoraEngine:
         return t
 
 
+@dataclass
+class FusedDecision:
+    """One scheduling step: fuse ``promote`` into the shared base (after
+    un-fusing ``demote``), or leave things alone (both None)."""
+
+    promote: Optional[str] = None
+    demote: Optional[str] = None
+
+
+class FusedLRU:
+    """LRU fused-state scheduler for multi-tenant serving.
+
+    The multi-tenant engine serves every request off ONE shared copy of the
+    base weights plus a per-request sparse side-delta. When traffic is
+    dominated by a single adapter, it is cheaper to *fuse* that adapter into
+    the shared base (one sparse scatter, paper §3.2) so its requests skip the
+    side-delta entirely; the remaining tenants are then served with diff
+    packs (their delta minus the fused one). This object only decides WHO is
+    fused — the engine applies the scatter and rebuilds its tables.
+
+    Policy: an exponential moving average of each adapter's share of batch
+    traffic, plus a recency stamp. An adapter is promoted when its share
+    crosses ``promote_at``; the fused adapter is demoted back to side-delta
+    form when its share decays below ``demote_at`` or when it has been unused
+    for ``max_idle`` scheduling steps (the LRU part). At most one adapter is
+    fused at a time: fusing several would make the shared base equal to the
+    *sum* of their deltas, which no single tenant wants.
+    """
+
+    def __init__(self, promote_at: float = 0.5, demote_at: float = 0.2,
+                 decay: float = 0.5, max_idle: int = 8):
+        assert 0.0 <= demote_at <= promote_at <= 1.0
+        self.promote_at = promote_at
+        self.demote_at = demote_at
+        self.decay = decay
+        self.max_idle = max_idle
+        self.share: Dict[str, float] = {}
+        self.last_used: Dict[str, int] = {}
+        self.step = 0
+        self.fused: Optional[str] = None
+
+    def observe(self, names: List[Optional[str]]) -> FusedDecision:
+        """Record one batch of per-request adapter names (None = base model)
+        and return the promotion/demotion to apply before serving it."""
+        self.step += 1
+        n = max(len(names), 1)
+        counts: Dict[str, int] = {}
+        for name in names:
+            if name is not None:
+                counts[name] = counts.get(name, 0) + 1
+                self.last_used[name] = self.step
+        seen = set(counts) | set(self.share)
+        for name in seen:
+            frac = counts.get(name, 0) / n
+            self.share[name] = (self.decay * self.share.get(name, 0.0)
+                                + (1.0 - self.decay) * frac)
+        # prune decayed-out idle tenants so long-lived serving doesn't scan
+        # every adapter ever seen on each batch
+        for name in [n_ for n_, s in self.share.items()
+                     if n_ != self.fused and s < 1e-4
+                     and self.step - self.last_used.get(n_, 0) > self.max_idle]:
+            del self.share[name]
+            self.last_used.pop(name, None)
+
+        decision = FusedDecision()
+        if self.fused is not None:
+            idle = self.step - self.last_used.get(self.fused, 0)
+            if (self.share.get(self.fused, 0.0) < self.demote_at
+                    or idle >= self.max_idle):
+                decision.demote = self.fused
+        hot = max(self.share, key=self.share.get, default=None)
+        if (hot is not None and hot != self.fused
+                and self.share[hot] >= self.promote_at):
+            if self.fused is not None:
+                decision.demote = self.fused
+            decision.promote = hot
+        if decision.promote:
+            self.fused = decision.promote
+        elif decision.demote:
+            self.fused = None
+        return decision
+
+
 def changed_fraction(base, switched) -> float:
     """%C from the paper's tables: fraction of weights differing from base."""
     tot, diff = 0, 0

@@ -1,5 +1,6 @@
 # Pallas TPU kernels for the perf-critical paths the paper optimises:
 #   scatter_apply  — rapid adapter switching (paper App. B `scatter_op`)
+#   sidedelta      — per-request batched sparse side-delta (multi-tenant)
 #   masked_update  — dense-mask fused apply (vectorised alternative)
 #   sparse_adamw   — packed optimizer update (paper App. D)
 #   flash_decode   — blocked decode attention (the serving hot loop)
@@ -7,4 +8,5 @@
 # BlockSpecs target TPU VMEM tiling.
 from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels.ops import (bucket_updates, flash_decode,  # noqa: F401
-                               masked_update, scatter_apply, sparse_adamw)
+                               masked_update, scatter_apply, sidedelta,
+                               sidedelta_table, sparse_adamw)

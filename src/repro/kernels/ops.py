@@ -16,6 +16,7 @@ import numpy as np
 from repro.kernels.flash_decode import flash_decode_blocks
 from repro.kernels.masked_update import masked_update_tiles
 from repro.kernels.scatter_apply import scatter_apply_tiles
+from repro.kernels.sidedelta import sidedelta_rows
 from repro.kernels.sparse_adamw import sparse_adamw_blocks
 
 
@@ -66,6 +67,36 @@ def scatter_apply(w, counts, rows, cols, vals, alpha, *, bn=256, bm=256,
     alpha = jnp.asarray(alpha, jnp.float32).reshape(1)
     return scatter_apply_tiles(w, counts, rows, cols, vals, alpha,
                                bn=bn, bm=bm, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# sidedelta (multi-tenant per-request adapters)
+# ---------------------------------------------------------------------------
+
+def sidedelta_table(flat_idx: np.ndarray, vals: np.ndarray, m: int, pad_to: int
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host pre-pass: one adapter's packed (flat_idx, vals) over an (n, m)
+    weight -> (rows, cols, vals) each (pad_to,), zero-padded. Padded entries
+    point at (0, 0) with val 0, which the kernel applies as a harmless +0.
+    Runs once per adapter at registration time, not per batch."""
+    flat_idx = np.asarray(flat_idx, np.int64).reshape(-1)
+    vals = np.asarray(vals, np.float32).reshape(-1)
+    k = flat_idx.shape[0]
+    assert k <= pad_to, (k, pad_to)
+    rows = np.zeros((pad_to,), np.int32)
+    cols = np.zeros((pad_to,), np.int32)
+    vbuf = np.zeros((pad_to,), np.float32)
+    rows[:k] = (flat_idx // m).astype(np.int32)
+    cols[:k] = (flat_idx % m).astype(np.int32)
+    vbuf[:k] = vals
+    return rows, cols, vbuf
+
+
+@functools.partial(jax.jit, static_argnames=("m", "interpret"))
+def sidedelta(x, rows, cols, vals, ids, *, m, interpret=False):
+    """Batched per-request sparse delta: (B, S, m) f32 with
+    delta[b] = x[b] @ dW_{ids[b]} (ids[b] < 0 -> zeros)."""
+    return sidedelta_rows(x, rows, cols, vals, ids, m, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,24 @@ def scatter_apply_ref(w: jax.Array, flat_idx: jax.Array, vals: jax.Array,
     return out.reshape(n, m).astype(w.dtype)
 
 
+def sidedelta_ref(x: jax.Array, rows: jax.Array, cols: jax.Array,
+                  vals: jax.Array, ids: jax.Array, m: int) -> jax.Array:
+    """x: (B, S, n); rows/cols/vals: (A, K); ids: (B,) with -1 = no adapter.
+    Returns (B, S, m) f32: delta[b] = x[b] @ dW_{ids[b]} with dW the sparse
+    matrix scattered from the packed (row, col, val) triples."""
+    B, S, n = x.shape
+    A, K = rows.shape
+
+    def one_adapter(r, c, v):
+        dw = jnp.zeros((n, m), jnp.float32)
+        return dw.at[r, c].add(v.astype(jnp.float32))
+
+    dense = jax.vmap(one_adapter)(rows, cols, vals)        # (A, n, m)
+    slot = jnp.maximum(ids, 0)
+    delta = jnp.einsum("bsn,bnm->bsm", x.astype(jnp.float32), dense[slot])
+    return jnp.where((ids >= 0)[:, None, None], delta, 0.0)
+
+
 def masked_update_ref(w: jax.Array, mask: jax.Array, vals: jax.Array,
                       alpha: float = 1.0) -> jax.Array:
     out = w.astype(jnp.float32) + alpha * mask.astype(jnp.float32) \

@@ -1,0 +1,91 @@
+"""sidedelta — per-request batched sparse side-delta matmul (multi-tenant).
+
+Multi-tenant SHiRA serving keeps ONE shared copy of the base weights and
+gives every request in a batch its own adapter. Instead of patching the
+weight per request (which would serialize the batch), the forward pass adds
+each request's sparse delta as a side term:
+
+  y[b] = x[b] @ W_shared  +  x[b] @ dW_{id[b]},   dW sparse with K nonzeros
+
+The side term never materialises dW: an adapter is a packed table of
+(row, col, val) triples, and the kernel computes, for request b with
+adapter a = ids[b],
+
+  delta[b, :, cols[a, k]] += x[b, :, rows[a, k]] * vals[a, k]   for all k
+
+i.e. a gather of K input columns fused with a scatter-accumulate into K
+output columns, vectorised over the request's S tokens per nonzero.
+
+TPU mapping: grid = (B,). ``ids`` is a scalar-prefetch operand
+(PrefetchScalarGridSpec), so the BlockSpec index maps can route program b
+to *its adapter's* (rows, cols, vals) block — only the selected adapter's
+K-entry table is DMA'd into VMEM, not the whole registry. ids[b] < 0 means
+"no adapter": the index map clamps to slot 0 and the kernel body skips all
+stores, leaving delta[b] = 0.
+
+The delta accumulates in f32 regardless of the compute dtype (the caller
+adds it onto the base matmul's output), so batched multi-tenant serving
+matches the sequential switch-per-batch path to fp32 accuracy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sidedelta_kernel(ids_ref, x_ref, rows_ref, cols_ref, vals_ref, out_ref,
+                      *, max_nnz: int):
+    b = pl.program_id(0)
+    out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(ids_ref[b] >= 0)
+    def _():
+        def body(k, _):
+            r = rows_ref[0, k]
+            c = cols_ref[0, k]
+            v = vals_ref[0, k]
+            xc = pl.load(x_ref, (pl.dslice(0, 1), slice(None),
+                                 pl.dslice(r, 1)))
+            cur = pl.load(out_ref, (pl.dslice(0, 1), slice(None),
+                                    pl.dslice(c, 1)))
+            pl.store(out_ref, (pl.dslice(0, 1), slice(None), pl.dslice(c, 1)),
+                     cur + xc.astype(jnp.float32) * v)
+            return ()
+
+        jax.lax.fori_loop(0, max_nnz, body, ())
+
+
+def sidedelta_rows(x: jax.Array, rows: jax.Array, cols: jax.Array,
+                   vals: jax.Array, ids: jax.Array, m: int,
+                   *, interpret: bool = False) -> jax.Array:
+    """x: (B, S, n); rows/cols: (A, K) int32 per-adapter coordinates into
+    (n, m); vals: (A, K) f32 (zero-padded); ids: (B,) int32 adapter slot per
+    request, -1 = base model. Returns delta (B, S, m) f32."""
+    B, S, n = x.shape
+    A, K = rows.shape
+    kernel = functools.partial(_sidedelta_kernel, max_nnz=K)
+
+    def slot(b, ids):
+        return (jnp.maximum(ids[b], 0), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, S, n), lambda b, ids: (b, 0, 0)),
+            pl.BlockSpec((1, K), slot),
+            pl.BlockSpec((1, K), slot),
+            pl.BlockSpec((1, K), slot),
+        ],
+        out_specs=pl.BlockSpec((1, S, m), lambda b, ids: (b, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, m), jnp.float32),
+        interpret=interpret,
+    )(ids, x, rows, cols, vals)

@@ -6,9 +6,23 @@ Demonstrates the paper's deployment story end to end on this host:
     (SwitchEngine) — no fuse/unfuse stage, base weights patched in place,
   * optionally fuse several adapters (multi-adapter serving).
 
+Multi-tenant serving (``--multi-tenant``): instead of serializing on the
+active adapter, every request in the batch names its own adapter and all of
+them decode together off ONE shared copy of the base weights
+(``repro.serving.MultiTenantEngine``). Each request's SHiRA pack is applied
+as a batched sparse side-delta in the forward pass via the Pallas
+``sidedelta`` kernel, and a ``FusedLRU`` scheduler fuses the hot adapter
+into the shared base (sparse scatter) while cold ones stay in side-delta
+form. Flags:
+  --multi-tenant        serve mixed-adapter batches in one forward pass
+  --batches N           how many request batches to stream
+  --skew F              tenant mix skew: fraction of requests routed to
+                        adapter_0 (the rest spread uniformly); high skew
+                        exercises the scheduler's promote path
+
 Example:
-  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --smoke \
-      --adapters 3 --tokens 16 --batch 4
+  PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-7b --smoke \
+      --multi-tenant --adapters 3 --tokens 16 --batch 8 --batches 4
 """
 from __future__ import annotations
 
@@ -23,10 +37,15 @@ from repro.configs import AdapterConfig, get_config, get_smoke_config
 from repro.models import lm
 
 
-def make_adapters(cfg, params, n: int, key) -> list:
+def make_adapters(cfg, params, n: int, key, multi_tenant: bool = False) -> list:
     """n random SHiRA packs (stand-ins for independently trained adapters)."""
     packs = []
-    acfg = AdapterConfig(kind="shira", mask="rand", sparsity=0.98)
+    targets = AdapterConfig().target_modules
+    if multi_tenant:
+        from repro.serving.multitenant import UNSUPPORTED_LEAVES
+        targets = tuple(t for t in targets if t not in UNSUPPORTED_LEAVES)
+    acfg = AdapterConfig(kind="shira", mask="rand", sparsity=0.98,
+                         target_modules=targets)
     for i in range(n):
         sub = jax.random.fold_in(key, i)
         values, aux = core.init_adapter(sub, params, acfg)
@@ -36,6 +55,45 @@ def make_adapters(cfg, params, n: int, key) -> list:
             is_leaf=lambda x: x is None)
         packs.append(core.pack_from_shira(f"adapter_{i}", values, aux))
     return packs
+
+
+def tenant_mix(rng, packs, batch: int, skew: float) -> list:
+    """Per-request adapter names: ``skew`` of the batch goes to the first
+    adapter, the rest spread over the others + the base model (None)."""
+    pool = [p.name for p in packs[1:]] + [None]
+    return [packs[0].name if rng.random() < skew
+            else pool[rng.integers(len(pool))] for _ in range(batch)]
+
+
+def serve_multi_tenant(cfg, params, packs, args) -> None:
+    from numpy.random import default_rng
+    from repro.core.switching import FusedLRU
+    from repro.serving.multitenant import MultiTenantEngine
+
+    engine = MultiTenantEngine(cfg, params, scheduler=FusedLRU())
+    for p in packs:
+        engine.register(p)
+    rng = default_rng(0)
+    B = args.batch
+    total, t_total = 0, 0.0
+    for step in range(args.batches):
+        names = tenant_mix(rng, packs, B, args.skew)
+        toks = jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(1),
+                                                     step),
+                                  (B, args.prompt_len), 0, cfg.vocab_size)
+        batch = {"tokens": toks}
+        if cfg.modality == "vision":
+            batch["patch_embeds"] = jnp.zeros(
+                (B, cfg.num_prefix_embeds, cfg.d_model))
+        out, dt = engine.generate(batch, names, args.tokens)
+        total += B * args.tokens
+        t_total += dt
+        mix = {n or "base": names.count(n) for n in dict.fromkeys(names)}
+        print(f"[serve-mt] batch {step}: {mix} fused={engine.fused} "
+              f"{B * args.tokens / dt:.1f} tok/s")
+    print(f"[serve-mt] {total} tokens in {t_total*1e3:.0f}ms "
+          f"({total / t_total:.1f} tok/s), "
+          f"{engine.fuse_transitions} fused-state transitions")
 
 
 def main() -> None:
@@ -48,6 +106,12 @@ def main() -> None:
     ap.add_argument("--adapters", type=int, default=2)
     ap.add_argument("--fuse", action="store_true",
                     help="serve with all adapters fused (multi-adapter)")
+    ap.add_argument("--multi-tenant", action="store_true",
+                    help="per-request adapters batched in one forward pass")
+    ap.add_argument("--batches", type=int, default=4,
+                    help="request batches to stream (multi-tenant)")
+    ap.add_argument("--skew", type=float, default=0.5,
+                    help="fraction of requests routed to adapter_0")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -55,10 +119,15 @@ def main() -> None:
         raise SystemExit("encoder-only archs have no decode serving path")
     key = jax.random.PRNGKey(0)
     params = lm.init_params(cfg, key)
-    packs = make_adapters(cfg, params, args.adapters, jax.random.PRNGKey(7))
+    packs = make_adapters(cfg, params, args.adapters, jax.random.PRNGKey(7),
+                          multi_tenant=args.multi_tenant)
+    if args.multi_tenant:
+        serve_multi_tenant(cfg, params, packs, args)
+        return
     engine = core.SwitchEngine(params)
 
-    cache_size = args.prompt_len + args.tokens + 8
+    from repro.serving.multitenant import serving_cache_size
+    cache_size = serving_cache_size(cfg, args.prompt_len, args.tokens)
     B = args.batch
 
     prefill_fn = jax.jit(lambda p, b: lm.prefill(p, cfg, b, cache_size))

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import (COMPUTE_DTYPE, apply_rope, dense, glorot,
+from repro.models.layers import (apply_rope, compute_dtype, dense, glorot,
                                  rms_norm)
 
 NEG_INF = -1e30
@@ -45,7 +45,7 @@ def _attend_block(q, k, v, q_pos, k_pos, causal, prefix_len, kv_len=None):
     qg = q.reshape(B, qc, KV, G, D)
     scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
     scores = jnp.einsum(
-        "bqkgd,bskd->bkgqs", qg.astype(COMPUTE_DTYPE), k.astype(COMPUTE_DTYPE),
+        "bqkgd,bskd->bkgqs", qg.astype(compute_dtype()), k.astype(compute_dtype()),
         preferred_element_type=jnp.float32) * scale
     mask = jnp.ones((qc, Sk), bool)
     if causal:
@@ -56,9 +56,9 @@ def _attend_block(q, k, v, q_pos, k_pos, causal, prefix_len, kv_len=None):
     if kv_len is not None:  # only the filled part of the cache is valid
         mask = mask & (k_pos[None, :] < kv_len)
     scores = jnp.where(mask[None, None, None], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(COMPUTE_DTYPE)
-    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(COMPUTE_DTYPE),
-                     preferred_element_type=COMPUTE_DTYPE)
+    probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype())
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(compute_dtype()),
+                     preferred_element_type=compute_dtype())
     return out.reshape(B, qc, H, v.shape[-1])
 
 
@@ -188,11 +188,11 @@ def gqa_prefill(params, cfg: ModelConfig, x, cache_size: int, *,
                             prefix_len=prefix_len, q_chunk=q_chunk)
     hd = cfg.resolved_head_dim
     KV = padded_heads(cfg)[1]
-    ck = jnp.zeros((B, cache_size, KV, hd), COMPUTE_DTYPE)
-    cv = jnp.zeros((B, cache_size, KV, hd), COMPUTE_DTYPE)
+    ck = jnp.zeros((B, cache_size, KV, hd), compute_dtype())
+    cv = jnp.zeros((B, cache_size, KV, hd), compute_dtype())
     cache = KVCache(
-        jax.lax.dynamic_update_slice(ck, k.astype(COMPUTE_DTYPE), (0, 0, 0, 0)),
-        jax.lax.dynamic_update_slice(cv, v.astype(COMPUTE_DTYPE), (0, 0, 0, 0)),
+        jax.lax.dynamic_update_slice(ck, k.astype(compute_dtype()), (0, 0, 0, 0)),
+        jax.lax.dynamic_update_slice(cv, v.astype(compute_dtype()), (0, 0, 0, 0)),
     )
     return dense(out.reshape(B, S, -1), params["wo"]), cache
 
@@ -202,8 +202,8 @@ def gqa_decode(params, cfg: ModelConfig, x, cache: KVCache, pos) -> Tuple[jax.Ar
     B = x.shape[0]
     positions = jnp.full((1,), pos)
     q, k, v = _gqa_qkv(params, cfg, x, positions)
-    ck = jax.lax.dynamic_update_slice(cache.k, k.astype(COMPUTE_DTYPE), (0, pos, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache.v, v.astype(COMPUTE_DTYPE), (0, pos, 0, 0))
+    ck = jax.lax.dynamic_update_slice(cache.k, k.astype(compute_dtype()), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v.astype(compute_dtype()), (0, pos, 0, 0))
     out = _attend_block(q, _maybe_repeat_kv(cfg, ck), _maybe_repeat_kv(cfg, cv),
                         positions, jnp.arange(ck.shape[1]),
                         causal=True, prefix_len=0, kv_len=pos + 1)
@@ -294,11 +294,11 @@ def mla_prefill(params, cfg: ModelConfig, x, cache_size: int, *,
     k, v = _mla_expand_kv(params, cfg, c_kv, k_rope)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     out = chunked_attention(q, k, v, causal=True, q_chunk=q_chunk)
-    cc = jnp.zeros((B, cache_size, m.kv_lora_rank), COMPUTE_DTYPE)
-    cr = jnp.zeros((B, cache_size, m.qk_rope_head_dim), COMPUTE_DTYPE)
+    cc = jnp.zeros((B, cache_size, m.kv_lora_rank), compute_dtype())
+    cr = jnp.zeros((B, cache_size, m.qk_rope_head_dim), compute_dtype())
     cache = KVCache(
-        jax.lax.dynamic_update_slice(cc, c_kv.astype(COMPUTE_DTYPE), (0, 0, 0)),
-        jax.lax.dynamic_update_slice(cr, k_rope.astype(COMPUTE_DTYPE), (0, 0, 0)),
+        jax.lax.dynamic_update_slice(cc, c_kv.astype(compute_dtype()), (0, 0, 0)),
+        jax.lax.dynamic_update_slice(cr, k_rope.astype(compute_dtype()), (0, 0, 0)),
     )
     return dense(out.reshape(B, S, -1), params["wo"]), cache
 
@@ -314,9 +314,9 @@ def mla_decode(params, cfg: ModelConfig, x, cache: KVCache, pos) -> Tuple[jax.Ar
     positions = jnp.full((1,), pos)
     q_nope, q_rope = _mla_q(params, cfg, x, positions)     # (B,1,H,·)
     c_kv_new, k_rope_new = _mla_ckv(params, cfg, x, positions)
-    cc = jax.lax.dynamic_update_slice(cache.k, c_kv_new.astype(COMPUTE_DTYPE),
+    cc = jax.lax.dynamic_update_slice(cache.k, c_kv_new.astype(compute_dtype()),
                                       (0, pos, 0))
-    cr = jax.lax.dynamic_update_slice(cache.v, k_rope_new.astype(COMPUTE_DTYPE),
+    cr = jax.lax.dynamic_update_slice(cache.v, k_rope_new.astype(compute_dtype()),
                                       (0, pos, 0))
     # Absorb W_uk into q: q_eff[b,h,r] = sum_n q_nope[b,1,h,n] * W_uk[r, h*n]
     # (f32 einsums: decode-step FLOPs are negligible; avoids CPU bf16-dot gaps)
@@ -334,5 +334,5 @@ def mla_decode(params, cfg: ModelConfig, x, cache: KVCache, pos) -> Tuple[jax.Ar
     out_lat = jnp.einsum("bhqs,bsr->bqhr", probs, cc.astype(jnp.float32))
     w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
     out = jnp.einsum("bqhr,rhv->bqhv", out_lat,
-                     w_uv.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+                     w_uv.astype(jnp.float32)).astype(compute_dtype())
     return dense(out.reshape(B, 1, -1), params["wo"]), KVCache(cc, cr)

@@ -14,13 +14,39 @@ adapter machinery key off (see repro/launch/sharding.py and repro/core/masks.py)
 """
 from __future__ import annotations
 
+import contextlib
 import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-COMPUTE_DTYPE = jnp.bfloat16
+COMPUTE_DTYPE = jnp.bfloat16  # default; see compute_precision()
+
+
+def compute_dtype():
+    """The current matmul/activation dtype. Module code reads this at trace
+    time so ``compute_precision`` can override it per scope."""
+    return COMPUTE_DTYPE
+
+
+@contextlib.contextmanager
+def compute_precision(dtype):
+    """Temporarily override the compute dtype (default bf16).
+
+    Used by the multi-tenant serving parity tests/benchmarks, which compare
+    two numerically different evaluation orders and need f32 matmuls for a
+    meaningful tolerance. Jitted closures must be *traced* inside the scope:
+    the dtype is read at trace time, and a closure traced outside the scope
+    keeps whatever dtype was active then.
+    """
+    global COMPUTE_DTYPE
+    prev = COMPUTE_DTYPE
+    COMPUTE_DTYPE = dtype
+    try:
+        yield
+    finally:
+        COMPUTE_DTYPE = prev
 
 
 def cast_compute(tree):
@@ -28,22 +54,76 @@ def cast_compute(tree):
     master weights live in the optimizer; all FSDP gathers / TP collectives
     then move bf16, halving parameter traffic)."""
     return jax.tree.map(
-        lambda x: x.astype(COMPUTE_DTYPE)
+        lambda x: x.astype(compute_dtype())
         if (hasattr(x, "ndim") and x.ndim >= 2
             and jnp.issubdtype(x.dtype, jnp.floating)) else x,
         tree)
 
 
+# ---------------------------------------------------------------------------
+# Side-delta weights (multi-tenant serving)
+# ---------------------------------------------------------------------------
+# A weight leaf may be replaced by a dict bundling the shared base matrix
+# with a per-adapter sparse-delta table and the batch's per-request adapter
+# ids (see repro/serving/multitenant.py). ``pdot`` then computes the base
+# matmul once for the whole batch plus each request's sparse correction via
+# the Pallas sidedelta kernel. The bundle is a plain dict so it survives
+# jax.lax.scan slicing over stacked layer weights.
+
+SIDEDELTA_KEY = "sd.base"
+
+
+def sidedelta_weight(base: jax.Array, rows: jax.Array, cols: jax.Array,
+                     vals: jax.Array, ids: jax.Array) -> dict:
+    """base: (n, m); rows/cols/vals: (A, K) packed per-adapter deltas;
+    ids: (B,) int32 per-request adapter slot (-1 = base only)."""
+    return {SIDEDELTA_KEY: base, "sd.rows": rows, "sd.cols": cols,
+            "sd.vals": vals, "sd.ids": ids}
+
+
+def is_sidedelta(w) -> bool:
+    return isinstance(w, dict) and SIDEDELTA_KEY in w
+
+
 def pdot(x: jax.Array, w: jax.Array) -> jax.Array:
     """Matmul in bf16 (MXU accumulates f32 internally on TPU; bf16 output
     keeps backward cotangents AND row-parallel psums in bf16 — found via the
-    dry-run: f32 outputs made every backward collective 2x, see §Perf)."""
+    dry-run: f32 outputs made every backward collective 2x, see §Perf).
+
+    ``w`` may also be a side-delta bundle (multi-tenant serving): then the
+    result is x @ base + per-request sparse deltas routed by the bundled ids.
+    """
+    if is_sidedelta(w):
+        return _pdot_sidedelta(x, w)
     return jax.lax.dot_general(
-        x.astype(COMPUTE_DTYPE),
-        w.astype(COMPUTE_DTYPE),
+        x.astype(compute_dtype()),
+        w.astype(compute_dtype()),
         (((x.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=COMPUTE_DTYPE,
+        preferred_element_type=compute_dtype(),
     )
+
+
+def _pdot_sidedelta(x: jax.Array, w: dict) -> jax.Array:
+    from repro.kernels.ops import sidedelta  # deferred: kernels are leaf deps
+    base = w[SIDEDELTA_KEY]
+    if x.ndim == 2:
+        # Flattened-token call sites (MoE shared experts): the model only
+        # ever flattens row-major from (B, S, d), so the request axis is
+        # recoverable from the bundled per-request ids. Single-program
+        # serving only — an EP shard's local batch would divide B wrongly.
+        B = w["sd.ids"].shape[0]
+        T = x.shape[0]
+        assert T % B == 0, (f"flattened tokens {T} not divisible by batch "
+                            f"{B} at a side-delta weight")
+        y2 = _pdot_sidedelta(x.reshape(B, T // B, x.shape[-1]), w)
+        return y2.reshape(T, y2.shape[-1])
+    assert x.ndim == 3, ("side-delta weights serve batched (B, S, d) "
+                         f"activations, got {x.shape}")
+    y = pdot(x, base)
+    delta = sidedelta(x, w["sd.rows"], w["sd.cols"], w["sd.vals"],
+                      w["sd.ids"], m=base.shape[-1],
+                      interpret=jax.default_backend() != "tpu")
+    return (y.astype(jnp.float32) + delta).astype(y.dtype)
 
 
 def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
@@ -57,7 +137,7 @@ def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
-    return out.astype(COMPUTE_DTYPE)
+    return out.astype(compute_dtype())
 
 
 def init_rms_norm(d: int) -> dict:
@@ -116,9 +196,9 @@ def mlp(params: dict, x: jax.Array, act: str = "silu") -> jax.Array:
     up = dense(x, params["w_up"])
     if act == "silu":
         gate = dense(x, params["w_gate"])
-        h = jax.nn.silu(gate.astype(jnp.float32)).astype(COMPUTE_DTYPE) * up
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(compute_dtype()) * up
     else:
-        h = jax.nn.gelu(up.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(compute_dtype())
     return dense(h, params["w_down"])
 
 
@@ -131,14 +211,14 @@ def init_embedding(key, vocab: int, d_model: int) -> dict:
 
 
 def embed(params: dict, tokens: jax.Array) -> jax.Array:
-    return jnp.take(params["emb"], tokens, axis=0).astype(COMPUTE_DTYPE)
+    return jnp.take(params["emb"], tokens, axis=0).astype(compute_dtype())
 
 
 def unembed(params: dict, h: jax.Array, tie_to: Optional[jax.Array] = None,
             softcap: float = 0.0, logical_vocab: int = 0) -> jax.Array:
     w = tie_to.T if tie_to is not None else params["lm_head"]
     logits = jax.lax.dot_general(
-        h.astype(COMPUTE_DTYPE), w.astype(COMPUTE_DTYPE),
+        h.astype(compute_dtype()), w.astype(compute_dtype()),
         (((h.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import blocks as B
 from repro.models.attention import KVCache
-from repro.models.layers import (COMPUTE_DTYPE, cross_entropy, embed,
+from repro.models.layers import (compute_dtype, cross_entropy, embed,
                                  init_embedding, init_rms_norm, normal_init,
                                  rms_norm, unembed)
 from repro.models.mamba2 import MambaCache, dims as mamba_dims
@@ -119,10 +119,10 @@ def embed_inputs(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, int]:
     """Returns (h, prefix_len). VLM prepends precomputed patch embeddings;
     audio consumes precomputed frame embeddings directly."""
     if cfg.modality == "audio":
-        return batch["frame_embeds"].astype(COMPUTE_DTYPE), 0
+        return batch["frame_embeds"].astype(compute_dtype()), 0
     h = embed(params["embed"], batch["tokens"])
     if cfg.modality == "vision":
-        patches = batch["patch_embeds"].astype(COMPUTE_DTYPE)
+        patches = batch["patch_embeds"].astype(compute_dtype())
         h = jnp.concatenate([patches, h], axis=1)
         return h, patches.shape[1]
     return h, 0
@@ -337,14 +337,14 @@ def _kv_cache_zeros(cfg: ModelConfig, bsz: int, cache_size: int):
     if cfg.attn_type == "mla":
         m = cfg.mla
         return KVCache(
-            jnp.zeros((bsz, cache_size, m.kv_lora_rank), COMPUTE_DTYPE),
-            jnp.zeros((bsz, cache_size, m.qk_rope_head_dim), COMPUTE_DTYPE))
+            jnp.zeros((bsz, cache_size, m.kv_lora_rank), compute_dtype()),
+            jnp.zeros((bsz, cache_size, m.qk_rope_head_dim), compute_dtype()))
     from repro.models.attention import padded_heads
     hd = cfg.resolved_head_dim
     kv = padded_heads(cfg)[1]
     return KVCache(
-        jnp.zeros((bsz, cache_size, kv, hd), COMPUTE_DTYPE),
-        jnp.zeros((bsz, cache_size, kv, hd), COMPUTE_DTYPE))
+        jnp.zeros((bsz, cache_size, kv, hd), compute_dtype()),
+        jnp.zeros((bsz, cache_size, kv, hd), compute_dtype()))
 
 
 def _mamba_cache_zeros(cfg: ModelConfig, bsz: int):
@@ -352,8 +352,8 @@ def _mamba_cache_zeros(cfg: ModelConfig, bsz: int):
     s = cfg.ssm
     return MambaCache(
         ssm=jnp.zeros((bsz, n_heads, s.head_dim, s.d_state), jnp.float32),
-        conv_x=jnp.zeros((bsz, s.d_conv - 1, d_inner), COMPUTE_DTYPE),
-        conv_bc=jnp.zeros((bsz, s.d_conv - 1, bc_dim), COMPUTE_DTYPE))
+        conv_x=jnp.zeros((bsz, s.d_conv - 1, d_inner), compute_dtype()),
+        conv_bc=jnp.zeros((bsz, s.d_conv - 1, bc_dim), compute_dtype()))
 
 
 def _stack(tree, n: int):

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import COMPUTE_DTYPE, dense, glorot
+from repro.models.layers import compute_dtype, dense, glorot
 
 
 class MambaCache(NamedTuple):
@@ -77,7 +77,7 @@ def _causal_conv(x, w, b):
     xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
     y = sum(xp[:, i:i + S, :] * w[i].astype(x.dtype) for i in range(K))
     return jax.nn.silu((y + b.astype(x.dtype)).astype(jnp.float32)
-                       ).astype(COMPUTE_DTYPE)
+                       ).astype(compute_dtype())
 
 
 def _project(params, cfg, u):
@@ -96,7 +96,7 @@ def _gated_out(params, cfg, y, z):
     g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
     var = jnp.mean(g * g, axis=-1, keepdims=True)
     g = g * jax.lax.rsqrt(var + cfg.norm_eps) * params["norm"]["scale"]
-    return dense(g.astype(COMPUTE_DTYPE), params["out_proj"])
+    return dense(g.astype(compute_dtype()), params["out_proj"])
 
 
 # ---------------------------------------------------------------------------
@@ -186,7 +186,7 @@ def ssd_chunked(x, dt, A, B, C, chunk: int,
     y_off = jnp.einsum("bclgn,bclgh,bcghpn->bclghp", Cc, out_decay, prevg)
 
     y = (y_diag + y_off).reshape(b, s, h, p)[:, :s_orig]
-    return y.astype(COMPUTE_DTYPE), final_state
+    return y.astype(compute_dtype()), final_state
 
 
 # ---------------------------------------------------------------------------
@@ -203,7 +203,7 @@ def _ssd_from_parts(params, cfg, xBC_x, xBC_bc, dt, B_, S_):
     A = -jnp.exp(params["A_log"].astype(jnp.float32))
     y, final_state = ssd_chunked(x, dt, A, Bm, Cm, s.chunk)
     y = y + (params["D"].astype(jnp.float32)[None, None, :, None]
-             * x.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+             * x.astype(jnp.float32)).astype(compute_dtype())
     return y, final_state
 
 
@@ -222,8 +222,8 @@ def mamba_prefill(params, cfg: ModelConfig, u) -> Tuple[jax.Array, MambaCache]:
     d_inner, _, _ = dims(cfg)
     B_, S_, _ = u.shape
     z, x_raw, bc_raw, dt = _project(params, cfg, u)
-    conv_x_state = x_raw[:, S_ - (s.d_conv - 1):, :].astype(COMPUTE_DTYPE)
-    conv_bc_state = bc_raw[:, S_ - (s.d_conv - 1):, :].astype(COMPUTE_DTYPE)
+    conv_x_state = x_raw[:, S_ - (s.d_conv - 1):, :].astype(compute_dtype())
+    conv_bc_state = bc_raw[:, S_ - (s.d_conv - 1):, :].astype(compute_dtype())
     xx = _causal_conv(x_raw, params["conv_x_w"], params["conv_x_b"])
     bc = _causal_conv(bc_raw, params["conv_bc_w"], params["conv_bc_b"])
     y, final_state = _ssd_from_parts(params, cfg, xx, bc, dt, B_, S_)
@@ -237,7 +237,7 @@ def _conv_step(window, new, w, b):
     win = jnp.concatenate([window, new.astype(window.dtype)], axis=1)
     out = jnp.sum(win.astype(jnp.float32) * w.astype(jnp.float32)[None],
                   axis=1) + b.astype(jnp.float32)
-    return jax.nn.silu(out).astype(COMPUTE_DTYPE), win[:, 1:]
+    return jax.nn.silu(out).astype(compute_dtype()), win[:, 1:]
 
 
 def mamba_decode(params, cfg: ModelConfig, u,
@@ -267,7 +267,7 @@ def mamba_decode(params, cfg: ModelConfig, u,
         + xdt[..., :, None] * Bh.astype(jnp.float32)[:, :, None, :]
     y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch.astype(jnp.float32))
     y = y + params["D"].astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
-    y = y.reshape(B_, 1, d_inner).astype(COMPUTE_DTYPE)
+    y = y.reshape(B_, 1, d_inner).astype(compute_dtype())
     out = _gated_out(params, cfg, y, z)
     return out, MambaCache(ssm=new_state, conv_x=new_conv_x,
                            conv_bc=new_conv_bc)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import COMPUTE_DTYPE, dense, glorot, init_mlp, mlp
+from repro.models.layers import compute_dtype, dense, glorot, init_mlp, mlp
 
 
 def init_moe(key, cfg: ModelConfig) -> dict:
@@ -38,16 +38,16 @@ def init_moe(key, cfg: ModelConfig) -> dict:
 
 def _expert_ffn(p, buf):
     """buf: (E, C, d) -> (E, C, d), batched SwiGLU over experts."""
-    up = jnp.einsum("ecd,edf->ecf", buf.astype(COMPUTE_DTYPE),
-                    p["experts_w_up"].astype(COMPUTE_DTYPE),
+    up = jnp.einsum("ecd,edf->ecf", buf.astype(compute_dtype()),
+                    p["experts_w_up"].astype(compute_dtype()),
                     preferred_element_type=jnp.float32)
-    gate = jnp.einsum("ecd,edf->ecf", buf.astype(COMPUTE_DTYPE),
-                      p["experts_w_gate"].astype(COMPUTE_DTYPE),
+    gate = jnp.einsum("ecd,edf->ecf", buf.astype(compute_dtype()),
+                      p["experts_w_gate"].astype(compute_dtype()),
                       preferred_element_type=jnp.float32)
-    h = (jax.nn.silu(gate) * up).astype(COMPUTE_DTYPE)
+    h = (jax.nn.silu(gate) * up).astype(compute_dtype())
     out = jnp.einsum("ecf,efd->ecd", h,
-                     p["experts_w_down"].astype(COMPUTE_DTYPE),
-                     preferred_element_type=COMPUTE_DTYPE)
+                     p["experts_w_down"].astype(compute_dtype()),
+                     preferred_element_type=compute_dtype())
     return out
 
 
@@ -98,11 +98,11 @@ def _moe_ffn_dense(params: dict, cfg: ModelConfig,
     capacity = int(max(round(m.capacity_factor * T * k / E), min(T, 512)))
 
     # --- dispatch: one scatter of (T, d) per routing choice ---
-    buf = jnp.zeros((E, capacity + 1, d), COMPUTE_DTYPE)            # +trash lane
+    buf = jnp.zeros((E, capacity + 1, d), compute_dtype())            # +trash lane
     buf = shard_as(buf, "moe_buf")
     counts = jnp.zeros((E,), jnp.int32)
     slots = []
-    xc = xf.astype(COMPUTE_DTYPE)
+    xc = xf.astype(compute_dtype())
     for j in range(k):
         e_j = top_i[:, j]                                           # (T,)
         oh = jax.nn.one_hot(e_j, E, dtype=jnp.int32)                # (T, E)
@@ -117,14 +117,14 @@ def _moe_ffn_dense(params: dict, cfg: ModelConfig,
 
     out_buf = _expert_ffn(params, buf[:, :capacity])                # (E,C,d)
     out_buf = jnp.concatenate(
-        [out_buf, jnp.zeros((E, 1, d), COMPUTE_DTYPE)], axis=1)
+        [out_buf, jnp.zeros((E, 1, d), compute_dtype())], axis=1)
     out_buf = shard_as(out_buf, "moe_buf")
 
     # --- combine: gather each choice's slot, weight by router prob ---
-    y = jnp.zeros((T, d), COMPUTE_DTYPE)
+    y = jnp.zeros((T, d), compute_dtype())
     for j in range(k):
         got = out_buf[top_i[:, j], slots[j]]                        # (T, d)
-        w_j = (top_p[:, j] * (slots[j] < capacity)).astype(COMPUTE_DTYPE)
+        w_j = (top_p[:, j] * (slots[j] < capacity)).astype(compute_dtype())
         y = y + got * w_j[:, None]
 
     if m.num_shared:
@@ -168,8 +168,8 @@ def _moe_ffn_ep(params: dict, cfg: ModelConfig, x: jax.Array,
         aux = jax.lax.pmean(E * jnp.sum(me * ce), dp)
 
         first = jax.lax.axis_index("model") * e_l
-        xc = xf.astype(COMPUTE_DTYPE)
-        buf = jnp.zeros((e_l, capacity + 1, d), COMPUTE_DTYPE)
+        xc = xf.astype(compute_dtype())
+        buf = jnp.zeros((e_l, capacity + 1, d), compute_dtype())
         counts = jnp.zeros((e_l,), jnp.int32)
         slots, mines = [], []
         for j in range(k):
@@ -185,20 +185,20 @@ def _moe_ffn_ep(params: dict, cfg: ModelConfig, x: jax.Array,
             slots.append(slot)
             mines.append(mine)
             buf = buf.at[le, slot].add(
-                xc * mine[:, None].astype(COMPUTE_DTYPE), mode="drop")
+                xc * mine[:, None].astype(compute_dtype()), mode="drop")
 
         p_loc = {"experts_w_up": w_up, "experts_w_gate": w_gate,
                  "experts_w_down": w_down}
         out_buf = _expert_ffn(p_loc, buf[:, :capacity])
         out_buf = jnp.concatenate(
-            [out_buf, jnp.zeros((e_l, 1, d), COMPUTE_DTYPE)], axis=1)
+            [out_buf, jnp.zeros((e_l, 1, d), compute_dtype())], axis=1)
 
-        y = jnp.zeros((bl * S, d), COMPUTE_DTYPE)
+        y = jnp.zeros((bl * S, d), compute_dtype())
         for j in range(k):
             le = jnp.where(mines[j], top_i[:, j] - first, 0)
             got = out_buf[le, slots[j]]
             w_j = (top_p[:, j] * mines[j]
-                   * (slots[j] < capacity)).astype(COMPUTE_DTYPE)
+                   * (slots[j] < capacity)).astype(compute_dtype())
             y = y + got * w_j[:, None]
         y = jax.lax.psum(y, "model")          # merge expert-shard partials
         return y.reshape(bl, S, d), aux
@@ -206,7 +206,8 @@ def _moe_ffn_ep(params: dict, cfg: ModelConfig, x: jax.Array,
     specs_in = (P(), P("model", None, None), P("model", None, None),
                 P("model", None, None), P(b_spec, None, None))
     specs_out = (P(b_spec, None, None), P())
-    y, aux = jax.shard_map(
+    from repro.compat import shard_map
+    y, aux = shard_map(
         local_fn, mesh=mesh, in_specs=specs_in, out_specs=specs_out,
         check_vma=False,
     )(params["w_router"], params["experts_w_up"], params["experts_w_gate"],

@@ -1,3 +1,4 @@
 from repro.serving.kvcache import (QuantKV, cache_bytes, dequantize_kv,  # noqa: F401
                                    quant_cache_zeros, quantize_kv,
                                    update_quant_cache)
+from repro.serving.multitenant import MultiTenantEngine  # noqa: F401

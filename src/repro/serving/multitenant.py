@@ -1,0 +1,326 @@
+"""Multi-tenant SHiRA serving: per-request adapters in ONE batch.
+
+The sequential serving path (``launch/serve.py`` + ``SwitchEngine``) swaps
+adapters *between* batches: two users wanting different adapters can never
+share a decode step. Sparse adapters make the per-request fix cheap — each
+request's delta is 1-2% of the weights — so this engine keeps ONE shared
+copy of the base weights and applies every request's SHiRA pack as a
+batched sparse side term in the forward pass:
+
+  y[b] = x[b] @ W_shared  +  x[b] @ dW_{adapter(b)}
+
+The side term is computed by the Pallas ``sidedelta`` kernel
+(repro/kernels/sidedelta.py) from packed per-adapter (row, col, val)
+tables; the weight leaves of the served parameter tree are replaced by
+``layers.sidedelta_weight`` bundles, which ``layers.pdot`` understands and
+which survive the LM's ``lax.scan`` over stacked layer weights (every table
+carries the weight's leading layer dims).
+
+Fused-state scheduling: with a ``core.switching.FusedLRU`` scheduler, the
+engine additionally fuses the *hot* adapter into the shared base (a single
+sparse scatter — the paper's rapid switch), so dominant-tenant requests skip
+the side term entirely. The other tenants are then served with diff packs
+(their delta minus the fused one, built by ``fusion.fuse_packs``), and base
+-model requests with the negated fused pack. Demotion scatters the delta
+back out and restores plain packs.
+
+Limitations: adapters on ``w_uk``/``w_uv`` (MLA absorbed-decode weights,
+consumed via reshape rather than a matmul) are rejected — exclude them from
+``AdapterConfig.target_modules`` when serving MLA archs multi-tenant.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adapters import AdapterPack, apply_pack
+from repro.core.fusion import fuse_packs
+from repro.core.switching import FusedLRU, SwitchEngine
+from repro.kernels.ops import sidedelta_table
+from repro.models import lm
+from repro.models.layers import sidedelta_weight
+
+BASE = None            # the "no adapter" tenant in a names list
+_BASE_SLOT = "__base__"
+
+# MLA absorbed-decode weights are reshaped, not matmul'd — pdot never sees
+# them, so a side-delta bundle there would crash (or silently diverge).
+UNSUPPORTED_LEAVES = ("w_uk", "w_uv")
+
+
+def _leaf_shapes(params) -> Dict[str, Tuple[int, ...]]:
+    out = {}
+    from repro.core import masks as M
+    for p, x in jax.tree_util.tree_flatten_with_path(params)[0]:
+        out[M.path_str(p)] = tuple(x.shape)
+    return out
+
+
+def greedy_decode(cfg, batch, tokens: int, prefill, decode):
+    """The serving decode loop, shared by the engine, the sequential
+    references, and the benchmark so position bookkeeping (incl. the vision
+    prefix) cannot drift between them.
+
+    prefill(batch) -> (logits, caches); decode(tok, caches, pos) ->
+    (logits, caches). Returns (greedy tokens (B, tokens) int32, last-step
+    logits (B, V)).
+    """
+    prompt_len = batch["tokens"].shape[1]
+    pos0 = prompt_len + (cfg.num_prefix_embeds
+                         if cfg.modality == "vision" else 0)
+    logits, caches = prefill(batch)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    outs = [nxt]
+    for i in range(tokens - 1):
+        logits, caches = decode(nxt, caches, pos0 + i)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        outs.append(nxt)
+    jax.block_until_ready(logits)
+    return jnp.concatenate(outs, axis=1), logits
+
+
+def serving_cache_size(cfg, prompt_len: int, tokens: int) -> int:
+    """KV-cache slots for a serve call: prompt + generated + slack, PLUS the
+    vision prefix (prefix embeddings occupy cache positions too)."""
+    prefix = cfg.num_prefix_embeds if cfg.modality == "vision" else 0
+    return prompt_len + prefix + tokens + 8
+
+
+def switch_per_request_reference(cfg, params, packs, toks, names,
+                                 tokens: int):
+    """Ground-truth baseline: serve each request ALONE after rapid-switching
+    (SwitchEngine) to its adapter. The multi-tenant engine's batched outputs
+    are validated against this in tests and examples (the benchmark uses the
+    stronger switch-per-GROUP baseline instead).
+
+    toks: (B, S) int; names: per-request adapter name or None. Returns
+    (greedy tokens (B, tokens) int32, last-step logits (B, V) f32, seconds).
+    """
+    toks = np.asarray(toks)
+    B, S = toks.shape
+    cs = serving_cache_size(cfg, S, tokens)
+    by_name = {p.name: p for p in packs}
+    engine = SwitchEngine(params)
+    prefill = jax.jit(lambda p, b: lm.prefill(p, cfg, b, cs))
+    decode = jax.jit(lambda p, t, c, pos: lm.decode_step(p, cfg, t, c, pos))
+    out = np.zeros((B, tokens), np.int32)
+    logits_last = np.zeros((B, cfg.padded_vocab), np.float32)
+    t0 = time.perf_counter()
+    for b, name in enumerate(names):
+        while engine.active:
+            engine.unload()
+        if name is not None:
+            engine.load(by_name[name])
+        seq, logits = greedy_decode(
+            cfg, {"tokens": jnp.asarray(toks[b:b + 1])}, tokens,
+            lambda bb: prefill(engine.params, bb),
+            lambda t, c, pos: decode(engine.params, t, c, pos))
+        out[b] = np.asarray(seq)[0]
+        logits_last[b] = np.asarray(logits, np.float32)[0]
+    dt = time.perf_counter() - t0
+    while engine.active:
+        engine.unload()
+    return out, logits_last, dt
+
+
+class MultiTenantEngine:
+    """Serves mixed-adapter batches off one shared base parameter tree."""
+
+    def __init__(self, cfg, params, *, scheduler: Optional[FusedLRU] = None):
+        self.cfg = cfg
+        self.shared = params                 # base (+ the fused pack, if any)
+        self.packs: Dict[str, AdapterPack] = {}
+        self.scheduler = scheduler
+        self.fused: Optional[str] = None
+        self.fuse_transitions = 0            # promote/demote scatter count
+        self._shapes = _leaf_shapes(params)
+        self._tables: Dict[str, dict] = {}   # path -> rows/cols/vals arrays
+        self._slots: Dict[str, int] = {}     # tenant name -> table slot
+        self._dirty = False
+        self._prefill = jax.jit(
+            lambda p, b, cs: lm.prefill(p, self.cfg, b, cs),
+            static_argnums=2)
+        self._decode = jax.jit(
+            lambda p, t, c, pos: lm.decode_step(p, self.cfg, t, c, pos))
+
+    # ------------------------------------------------------------------
+    # Registration / side-delta tables
+    # ------------------------------------------------------------------
+
+    def register(self, pack: AdapterPack) -> None:
+        for path in pack.entries:
+            leaf = path.rsplit("/", 1)[-1]
+            if leaf in UNSUPPORTED_LEAVES:
+                raise ValueError(
+                    f"adapter {pack.name!r} targets {path!r}: {leaf} is "
+                    "consumed outside pdot (MLA absorbed decode); exclude it "
+                    "from target_modules for multi-tenant serving")
+            if path not in self._shapes:
+                raise KeyError(f"adapter {pack.name!r} targets unknown "
+                               f"weight {path!r}")
+        if pack.name == self.fused:
+            # un-fuse the OLD delta before replacing the pack, or the next
+            # demote would subtract the new one from a base holding the old
+            self._demote()
+            if self.scheduler is not None and \
+                    self.scheduler.fused == pack.name:
+                self.scheduler.fused = None  # keep it re-promotable
+        self.packs[pack.name] = pack
+        self._dirty = True
+
+    def _side_packs(self) -> Dict[str, AdapterPack]:
+        """What each tenant's side delta must be, given the fused state."""
+        out = {}
+        for name, pack in self.packs.items():
+            if name == self.fused:
+                continue                     # fused tenant rides the base
+            if self.fused is None:
+                out[name] = pack
+            else:
+                out[name] = fuse_packs([pack, self.packs[self.fused]],
+                                       weights=[1.0, -1.0],
+                                       name=f"{name}-minus-{self.fused}")
+        if self.fused is not None:           # base traffic must un-see it
+            out[_BASE_SLOT] = fuse_packs([self.packs[self.fused]],
+                                         weights=[-1.0],
+                                         name=f"-{self.fused}")
+        return out
+
+    def _rebuild(self) -> None:
+        side = self._side_packs()
+        self._slots = {name: i for i, name in enumerate(sorted(side))}
+        paths = sorted({p for pk in side.values() for p in pk.entries})
+        tables: Dict[str, dict] = {}
+        A = max(len(side), 1)
+        for path in paths:
+            shape = self._shapes[path]
+            *lead, n, m = shape
+            nl = int(np.prod(lead)) if lead else 1
+            kmax = 1
+            for pk in side.values():
+                if path in pk.entries:
+                    kmax = max(kmax, pk.entries[path][0].shape[-1])
+            rows = np.zeros((nl, A, kmax), np.int32)
+            cols = np.zeros((nl, A, kmax), np.int32)
+            vals = np.zeros((nl, A, kmax), np.float32)
+            for name, pk in side.items():
+                if path not in pk.entries:
+                    continue
+                s = self._slots[name]
+                idx, val = pk.entries[path]
+                idxf = np.asarray(idx).reshape(nl, -1)
+                valf = np.asarray(val, np.float32).reshape(nl, -1) * pk.alpha
+                for i in range(nl):
+                    r, c, v = sidedelta_table(idxf[i], valf[i], m, kmax)
+                    rows[i, s], cols[i, s], vals[i, s] = r, c, v
+            tables[path] = {
+                "rows": jnp.asarray(rows.reshape(tuple(lead) + (A, kmax))),
+                "cols": jnp.asarray(cols.reshape(tuple(lead) + (A, kmax))),
+                "vals": jnp.asarray(vals.reshape(tuple(lead) + (A, kmax))),
+            }
+        self._tables = tables
+        self._dirty = False
+
+    # ------------------------------------------------------------------
+    # Fused-state transitions (the scheduler's promote/demote)
+    # ------------------------------------------------------------------
+
+    def _demote(self) -> None:
+        if self.fused is None:
+            return
+        self.shared = apply_pack(self.shared, self.packs[self.fused],
+                                 sign=-1.0)
+        self.fused = None
+        self.fuse_transitions += 1
+        self._dirty = True
+
+    def _promote(self, name: str) -> None:
+        if name == self.fused:
+            return
+        self._demote()
+        self.shared = apply_pack(self.shared, self.packs[name], sign=+1.0)
+        self.fused = name
+        self.fuse_transitions += 1
+        self._dirty = True
+
+    def schedule(self, names: Sequence[Optional[str]]) -> None:
+        """Consult the scheduler for this batch's traffic; apply its
+        promote/demote before serving."""
+        if self.scheduler is None:
+            return
+        d = self.scheduler.observe(list(names))
+        if d.promote is not None:
+            self._promote(d.promote)
+        elif d.demote is not None:
+            self._demote()
+
+    # ------------------------------------------------------------------
+    # Forward passes
+    # ------------------------------------------------------------------
+
+    def ids_for(self, names: Sequence[Optional[str]]) -> jax.Array:
+        if self._dirty:
+            self._rebuild()
+        ids = []
+        for name in names:
+            if name == self.fused or (name is BASE and self.fused is None):
+                ids.append(-1)               # pure shared base
+            elif name is BASE:
+                ids.append(self._slots[_BASE_SLOT])
+            else:
+                ids.append(self._slots[name])
+        return jnp.asarray(ids, jnp.int32)
+
+    def wrapped_params(self, ids: jax.Array):
+        """The shared tree with side-delta bundles at every adapted weight."""
+        if self._dirty:
+            self._rebuild()
+        tables = self._tables
+
+        def walk(tree, prefix):
+            if isinstance(tree, dict):
+                return {k: walk(v, prefix + (str(k),)) for k, v in tree.items()}
+            if isinstance(tree, (list, tuple)):
+                t = [walk(v, prefix + (str(i),)) for i, v in enumerate(tree)]
+                return tuple(t) if isinstance(tree, tuple) else t
+            key = "/".join(prefix)
+            if key in tables:
+                t = tables[key]
+                lead = tree.shape[:-2]
+                return sidedelta_weight(
+                    tree, t["rows"], t["cols"], t["vals"],
+                    jnp.broadcast_to(ids, lead + ids.shape))
+            return tree
+
+        return walk(self.shared, ())
+
+    def prefill(self, batch, names: Sequence[Optional[str]], cache_size: int):
+        p = self.wrapped_params(self.ids_for(names))
+        return self._prefill(p, batch, cache_size)
+
+    def decode_step(self, tokens, caches, pos, names: Sequence[Optional[str]]):
+        p = self.wrapped_params(self.ids_for(names))
+        return self._decode(p, tokens, caches, pos)
+
+    def generate(self, batch, names: Sequence[Optional[str]], tokens: int,
+                 cache_size: Optional[int] = None):
+        """Greedy-decode ``tokens`` tokens for a mixed-adapter batch.
+
+        Returns (out_tokens (B, tokens) int32, seconds)."""
+        cs = cache_size or serving_cache_size(self.cfg,
+                                              batch["tokens"].shape[1],
+                                              tokens)
+        self.schedule(names)
+        ids = self.ids_for(names)
+        p = self.wrapped_params(ids)
+        t0 = time.perf_counter()
+        out, _ = greedy_decode(
+            self.cfg, batch, tokens,
+            lambda b: self._prefill(p, b, cs),
+            lambda t, c, pos: self._decode(p, t, c, pos))
+        dt = time.perf_counter() - t0
+        return out, dt

@@ -3,4 +3,29 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: heavyweight test, skipped by default so the tier-1 "
+        "command (`python -m pytest -x -q`) finishes in minutes; run with "
+        "--runslow")
+    config.addinivalue_line(
+        "markers", "smoke: fast end-to-end smoke over an architecture/path")
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="also run tests marked slow")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow: needs --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

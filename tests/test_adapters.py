@@ -119,6 +119,80 @@ def test_multi_adapter_fusion_equals_sequential(setup):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 
 
+def test_switch_engine_roundtrip_changed_fraction(setup):
+    """load -> unload restores params within fp32 tolerance AND the paper's
+    %C metric returns to ~0 (the rapid-switch invariant)."""
+    cfg, params, _ = setup
+    acfg = AdapterConfig(kind="shira", mask="rand", sparsity=0.98)
+    values, aux = core.init_adapter(jax.random.PRNGKey(11), params, acfg)
+    values = jax.tree.map(
+        lambda v: None if v is None
+        else 0.02 * jax.random.normal(jax.random.PRNGKey(12), v.shape),
+        values, is_leaf=lambda x: x is None)
+    pack = core.pack_from_shira("rt", values, aux)
+    eng = core.SwitchEngine(params)
+    eng.load(pack)
+    ch_loaded = core.switching.changed_fraction(params, eng.params)
+    assert ch_loaded > 0.001
+    eng.unload()
+    # %C back to ~0: only last-ulp residue of the float add/sub roundtrip
+    # may remain (bitwise-differing but value-identical to 1e-6)
+    ch_unloaded = core.switching.changed_fraction(params, eng.params)
+    assert ch_unloaded < 0.2 * ch_loaded and ch_unloaded < 5e-3
+    for a, b in zip(jax.tree.leaves(eng.params), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_fuse_packs_merges_duplicate_coordinates(setup):
+    """Two packs sharing coordinates (same mask) must merge by ADDITION in
+    the fused pack: loading it == loading both sequentially."""
+    cfg, params, _ = setup
+    acfg = AdapterConfig(kind="shira", mask="wm", sparsity=0.97)
+    v1, aux = core.init_adapter(jax.random.PRNGKey(6), params, acfg)
+    # identical index sets (wm mask is deterministic), different values —
+    # every coordinate is a duplicate between the two packs
+    p1 = core.pack_from_shira("x", jax.tree.map(lambda v: v + 0.03, v1), aux,
+                              alpha=1.0)
+    p2 = core.pack_from_shira("y", jax.tree.map(lambda v: v - 0.01, v1), aux,
+                              alpha=0.5)
+    seq = core.SwitchEngine(params)
+    seq.load(p1)
+    seq.load(p2)
+    fused = core.fuse_packs([p1, p2])
+    # duplicate merging really happened: fused K == single-pack K
+    for path, (idx, _) in fused.entries.items():
+        assert idx.shape[-1] == p1.entries[path][0].shape[-1]
+    one = core.SwitchEngine(params)
+    one.load(fused)
+    for a, b in zip(jax.tree.leaves(seq.params), jax.tree.leaves(one.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_fuse_packs_keeps_paths_unique_to_later_packs(setup):
+    """A path covered only by the SECOND pack must survive fusion (diff
+    packs for multi-tenant fused serving rely on this)."""
+    cfg, params, _ = setup
+    a_wq = AdapterConfig(kind="shira", mask="wm", sparsity=0.97,
+                         target_modules=("wq",))
+    a_wo = AdapterConfig(kind="shira", mask="wm", sparsity=0.97,
+                         target_modules=("wo",))
+    v1, x1 = core.init_adapter(jax.random.PRNGKey(21), params, a_wq)
+    v2, x2 = core.init_adapter(jax.random.PRNGKey(22), params, a_wo)
+    p1 = core.pack_from_shira("wq-only", jax.tree.map(lambda v: v + 0.1, v1),
+                              x1)
+    p2 = core.pack_from_shira("wo-only", jax.tree.map(lambda v: v - 0.2, v2),
+                              x2)
+    fused = core.fuse_packs([p1, p2], weights=[1.0, -1.0])
+    assert set(fused.entries) == set(p1.entries) | set(p2.entries)
+    seq = core.SwitchEngine(params)
+    seq.load(p1)
+    seq.load(core.adapters.AdapterPack(p2.name, p2.entries, alpha=-p2.alpha))
+    one = core.SwitchEngine(params)
+    one.load(fused)
+    for a, b in zip(jax.tree.leaves(seq.params), jax.tree.leaves(one.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
 def test_overlap_lower_for_independent_rand_masks(setup):
     """§3.2: sparse masks ⇒ low interference. Random independent masks
     overlap ~(1-sparsity); LoRA-equivalent dense deltas overlap 100%."""
@@ -133,6 +207,7 @@ def test_overlap_lower_for_independent_rand_masks(setup):
     assert mean_ov < 0.15, f"random 3% masks should barely overlap: {mean_ov}"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("kind", ["lora", "dora", "shira-dora"])
 def test_baseline_adapters_train_signal(setup, kind):
     cfg, params, batch = setup

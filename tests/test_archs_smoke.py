@@ -22,6 +22,7 @@ def tiny_batch(cfg, B=2, S=64, key=0):
             "labels": jnp.ones((B, S), jnp.int32)}
 
 
+@pytest.mark.smoke
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_train_step(arch):
     cfg = get_smoke_config(arch)
@@ -37,6 +38,7 @@ def test_smoke_train_step(arch):
 
 @pytest.mark.parametrize("arch", [a for a in ARCH_IDS
                                   if not get_config(a).encoder_only])
+@pytest.mark.smoke
 def test_smoke_decode_matches_prefill(arch):
     cfg = get_smoke_config(arch)
     params = lm.init_params(cfg, jax.random.PRNGKey(1))

@@ -62,6 +62,65 @@ def test_scatter_load_unload_roundtrip():
     np.testing.assert_allclose(np.asarray(restored), np.asarray(w), atol=1e-5)
 
 
+def test_scatter_apply_vs_dense_np_reference():
+    """Interpret-mode kernel vs a plain numpy dense scatter-add."""
+    rng = np.random.RandomState(7)
+    n, m = 512, 512
+    w = rng.randn(n, m).astype(np.float32)
+    idx = np.unique(rng.randint(0, n * m, 3000))
+    vals = rng.randn(len(idx)).astype(np.float32)
+    alpha = 0.75
+    args = [jnp.asarray(a) for a in ops.bucket_updates(idx, vals, n, m)]
+    out = ops.scatter_apply(jnp.asarray(w), *args, alpha, interpret=True)
+    want = w.copy()
+    want.reshape(-1)[idx] += alpha * vals
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,S,n,m,A,K", [
+    (4, 1, 64, 64, 3, 33),       # decode-step shape
+    (3, 16, 128, 64, 4, 129),    # prefill shape, non-square
+    (2, 8, 96, 160, 1, 7),       # single adapter
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sidedelta_parity(B, S, n, m, A, K, dtype):
+    rng = np.random.RandomState(hash((B, S, n, m, A, K)) % 2**31)
+    x = jnp.asarray(rng.randn(B, S, n), dtype)
+    rows = jnp.asarray(rng.randint(0, n, (A, K)), jnp.int32)
+    cols = jnp.asarray(rng.randint(0, m, (A, K)), jnp.int32)
+    vals = jnp.asarray(rng.randn(A, K), jnp.float32)
+    ids = jnp.asarray(rng.randint(-1, A, (B,)), jnp.int32)
+    out = ops.sidedelta(x, rows, cols, vals, ids, m=m, interpret=True)
+    want = ref.sidedelta_ref(x, rows, cols, vals, ids, m)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_sidedelta_base_requests_untouched():
+    """ids = -1 must yield an exactly-zero delta row."""
+    rng = np.random.RandomState(8)
+    x = jnp.asarray(rng.randn(3, 4, 32), jnp.float32)
+    rows = jnp.asarray(rng.randint(0, 32, (2, 11)), jnp.int32)
+    cols = jnp.asarray(rng.randint(0, 16, (2, 11)), jnp.int32)
+    vals = jnp.asarray(rng.randn(2, 11), jnp.float32)
+    ids = jnp.asarray([-1, 0, -1], jnp.int32)
+    out = np.asarray(ops.sidedelta(x, rows, cols, vals, ids, m=16,
+                                   interpret=True))
+    assert np.all(out[0] == 0) and np.all(out[2] == 0)
+    assert np.any(out[1] != 0)
+
+
+def test_sidedelta_table_roundtrip():
+    """Host prep: packed flat indices -> padded (rows, cols, vals)."""
+    flat = np.asarray([5, 17, 33], np.int64)
+    vals = np.asarray([1.0, -2.0, 3.0], np.float32)
+    rows, cols, v = ops.sidedelta_table(flat, vals, m=16, pad_to=5)
+    np.testing.assert_array_equal(rows, [0, 1, 2, 0, 0])
+    np.testing.assert_array_equal(cols, [5, 1, 1, 0, 0])
+    np.testing.assert_array_equal(v, [1.0, -2.0, 3.0, 0.0, 0.0])
+
+
 @pytest.mark.parametrize("shape", [(256, 256), (512, 1024)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_masked_update(shape, dtype):

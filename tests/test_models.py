@@ -47,6 +47,7 @@ def test_ssd_chunked_matches_naive(s, chunk):
                                rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.slow
 def test_ssd_initial_state_continuation():
     """Running [first half] then [second half with carried state] must equal
     one full pass — the invariant prefill/decode rely on."""
@@ -105,6 +106,7 @@ def test_prefix_lm_attention_sees_prefix():
     assert not np.allclose(np.asarray(causal[:, 0]), np.asarray(prefix[:, 0]))
 
 
+@pytest.mark.slow
 def test_mla_decode_absorption_equivalence():
     cfg = get_smoke_config("deepseek-v2-lite-16b")
     params = A.init_mla(jax.random.PRNGKey(0), cfg)

@@ -85,6 +85,7 @@ def test_quant_cache_halves_bytes():
     assert cache_bytes(shape, quant=True) < 0.52 * cache_bytes(shape, False)
 
 
+@pytest.mark.slow
 def test_grad_accumulation_matches_full_batch():
     """microbatch=4 must give (numerically) the same update as one batch."""
     from repro.configs import TrainConfig, get_smoke_config

@@ -46,6 +46,7 @@ def eval_loss(cfg, params, task: int) -> float:
     return float(lm.train_loss(params, cfg, batch)[0])
 
 
+@pytest.mark.slow
 def test_adapter_switching_recovers_each_task(adapters_and_base):
     cfg, base, packs = adapters_and_base
     eng = core.SwitchEngine(base)

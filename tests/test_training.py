@@ -61,6 +61,7 @@ def test_packed_optimizer_state_is_sparse():
     assert opt_elems < 0.05 * model_elems
 
 
+@pytest.mark.slow
 def test_percent_changed_shira_vs_lora():
     """%C column of paper Tab. 2: SHiRA overwrites ~1-2%, LoRA the majority."""
     t, out = _run(AdapterConfig(kind="shira", mask="wm", sparsity=0.98),
