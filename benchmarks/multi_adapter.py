@@ -49,11 +49,17 @@ def train_all(acfg: AdapterConfig):
 
 
 def fused_params_shira(cfg, base, trained):
-    packs = [core.pack_from_shira(f"t{t}", v, tr.aux)
+    # packs round-trip through an on-disk AdapterStore (format v2) — the
+    # fuse path consumes adapter IDS, like production serving would
+    import tempfile
+
+    from repro.hub import AdapterStore
+    store = AdapterStore(tempfile.mkdtemp(prefix="ma-bench-store-"))
+    names = [store.add(core.pack_from_shira(f"t{t}", v, tr.aux))
              for t, (tr, v) in trained.items()]
-    eng = core.SwitchEngine(base)
-    eng.load_fused(packs)
-    return eng.params, packs
+    eng = core.SwitchEngine(base, store=store)
+    eng.load_fused(names)
+    return eng.params, [store.get(n) for n in names]
 
 
 def fused_params_lora(cfg, base, trained, acfg):

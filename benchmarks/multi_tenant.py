@@ -104,9 +104,17 @@ def main() -> None:
         params = lm.init_params(cfg, jax.random.PRNGKey(0))
         packs = make_adapters(cfg, params, args.adapters,
                               jax.random.PRNGKey(7), multi_tenant=True)
-        engine = MultiTenantEngine(cfg, params)
+        # all packs go through the on-disk store (format v2, f32 round trips
+        # bit-exactly so the parity bars are unaffected)
+        import tempfile
+
+        from repro.hub import AdapterStore
+        store = AdapterStore(tempfile.mkdtemp(prefix="mt-bench-store-"))
         for p in packs:
-            engine.register(p)
+            store.add(p)
+        engine = MultiTenantEngine(cfg, params, store=store)
+        for p in packs:
+            engine.register(p.name)
 
         rng = np.random.default_rng(0)
         B = args.batch

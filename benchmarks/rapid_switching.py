@@ -5,12 +5,17 @@ measures:
   * SHiRA switch: scatter-add of 1% packed updates (jnp path + Pallas
     scatter_apply in interpret mode for the kernel-shape check),
   * LoRA fuse: W + A@B at rank 64 (the paper's LVM rank),
+  * pack I/O: loading the adapter from a format-v2 file via the
+    ``repro.hub`` store, f32 and int8 (the cold-start path: an evicted
+    tenant's first request pays load + scatter),
 and derives the TPU-side byte model: adapter bytes moved vs full-weight
 rewrite + GEMM FLOPs (reported as model terms since this container has no
 TPU clock).
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 
 import jax
@@ -18,6 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import masks as M
+from repro.core.adapters import AdapterPack
+from repro.hub import load_pack, save_pack
 
 RANK = 64
 SPARSITY = 0.99
@@ -34,8 +41,10 @@ def timed(fn, *args, reps=5):
 
 def main() -> None:
     print("dim,shira_scatter_ms,lora_fuse_ms,speedup,"
-          "shira_bytes_mb,lora_bytes_mb,lora_gemm_gflop")
+          "shira_bytes_mb,lora_bytes_mb,lora_gemm_gflop,"
+          "pack_load_f32_ms,pack_load_int8_ms,int8_shrink")
     rng = np.random.RandomState(0)
+    tmp = tempfile.mkdtemp(prefix="rs-bench-")
     for dim in (1024, 2048, 4096):
         w = jnp.asarray(rng.randn(dim, dim), jnp.float32)
         k = int((1 - SPARSITY) * dim * dim)
@@ -55,8 +64,22 @@ def main() -> None:
         shira_mb = k * 8 / 1e6                      # idx + val
         lora_mb = (2 * dim * RANK + dim * dim) / 1e6 * 4  # A,B in + W rewrite
         gemm_gflop = 2 * RANK * dim * dim / 1e9
+
+        # cold-start pack I/O: format-v2 file -> usable AdapterPack
+        pack = AdapterPack(f"d{dim}", {"w": (idx, vals)})
+        t_io = {}
+        for mode in ("f32", "int8"):
+            f = save_pack(pack, os.path.join(tmp, f"d{dim}_{mode}.shpk"),
+                          values=mode)
+            t0 = time.perf_counter()
+            loaded = load_pack(f)
+            t_io[mode] = (time.perf_counter() - t0) * 1e3
+        q = load_pack(os.path.join(tmp, f"d{dim}_int8.shpk"),
+                      dequantize=False)
         print(f"{dim},{t_s:.2f},{t_f:.2f},{t_f / t_s:.2f},"
-              f"{shira_mb:.2f},{lora_mb:.2f},{gemm_gflop:.2f}")
+              f"{shira_mb:.2f},{lora_mb:.2f},{gemm_gflop:.2f},"
+              f"{t_io['f32']:.2f},{t_io['int8']:.2f},"
+              f"{pack.nbytes() / q.nbytes():.1f}x")
 
 
 if __name__ == "__main__":

@@ -1,1 +1,4 @@
 from repro.checkpoint.manager import CheckpointManager, restore_tree, save_tree  # noqa: F401
+# adapter-pack (format v2) I/O lives in repro.hub.packio; CheckpointManager
+# defers its imports into save_adapter/restore_adapter so importing
+# repro.checkpoint stays light (no serving/model stack)

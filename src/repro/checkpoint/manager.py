@@ -135,6 +135,39 @@ class CheckpointManager:
             out[name] = restore_tree(tpl, d, name, sh)
         return out
 
+    # ------------------------------------------------------------------
+    # Adapter packs: first-class checkpoint artifacts (format v2, repro.hub)
+    # ------------------------------------------------------------------
+
+    def save_adapter(self, step: int, pack, values: str = "f32") -> str:
+        """Write an adapter pack into the step's directory. Packs are tiny
+        (1-2% of model bytes, less in int8), so snapshotting one per step is
+        cheap; it becomes visible with the step's COMMITTED marker (written
+        by ``save``), keeping adapter and optimizer state consistent."""
+        from repro.hub.packio import save_pack
+        d = self._step_dir(step)
+        os.makedirs(d, exist_ok=True)
+        return save_pack(pack, os.path.join(d, f"adapter_{pack.name}.shpk"),
+                         values=values)
+
+    def adapters(self, step: int) -> List[str]:
+        d = self._step_dir(step)
+        if not os.path.isdir(d):
+            return []
+        return sorted(f[len("adapter_"):-len(".shpk")]
+                      for f in os.listdir(d)
+                      if f.startswith("adapter_") and f.endswith(".shpk"))
+
+    def restore_adapter(self, name: str, step: Optional[int] = None,
+                        dequantize: bool = True):
+        from repro.hub.packio import load_pack
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints in {self.root}")
+        return load_pack(
+            os.path.join(self._step_dir(step), f"adapter_{name}.shpk"),
+            dequantize=dequantize)
+
     def _gc(self):
         steps = self.steps()
         for s in steps[:-self.keep]:

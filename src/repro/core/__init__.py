@@ -9,4 +9,6 @@ from repro.core.fusion import fuse_packs, index_overlap  # noqa: F401
 from repro.core.masks import (gather_packed, make_dense_masks,  # noqa: F401
                               make_packed_indices, mask_grads,
                               scatter_packed_add, scatter_packed_set)
-from repro.core.switching import LoraEngine, SwitchEngine  # noqa: F401
+from repro.core.switching import (FusedLRU, LoraEngine,  # noqa: F401
+                                  SwitchEngine, normalize_tenant,
+                                  tenant_key, tenant_members)

@@ -14,13 +14,42 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.adapters import AdapterPack, apply_pack
+
+# A tenant names either the base model (None), one adapter ("a0"), or an
+# adapter *stack* (("a0", "lang_de")) — several adapters applied together,
+# e.g. an agent persona on top of a domain adapter.
+Tenant = Union[None, str, Tuple[str, ...]]
+
+
+def normalize_tenant(name) -> Tenant:
+    """Canonical tenant key: None | str | sorted tuple (len >= 2).
+
+    Stacks are additive (scatter-adds commute), so order inside a stack is
+    irrelevant — sorting makes ("b", "a") and ("a", "b") one tenant."""
+    if name is None or isinstance(name, str):
+        return name
+    members = sorted(set(name))      # dedup: ("a", "a") must not double-load
+    if not members:
+        return None
+    return members[0] if len(members) == 1 else tuple(members)
+
+
+def tenant_members(name: Tenant) -> List[str]:
+    if name is None:
+        return []
+    return [name] if isinstance(name, str) else list(name)
+
+
+def tenant_key(name: Tenant) -> str:
+    """Stable string key for sorting/labelling mixed str|tuple tenants."""
+    return "" if name is None else "+".join(tenant_members(name))
 
 
 @dataclass
@@ -37,17 +66,31 @@ def _tree_bytes(tree) -> int:
 
 
 class SwitchEngine:
-    """Holds deployed params; one active adapter (or fused set) at a time."""
+    """Holds deployed params; one active adapter (or fused set) at a time.
 
-    def __init__(self, params):
+    With an ``AdapterStore`` attached, packs may be referred to by name —
+    ``load``/``switch``/``load_fused`` accept either an ``AdapterPack`` or a
+    registered adapter id, and the store handles disk residency."""
+
+    def __init__(self, params, store=None):
         self.params = params
+        self.store = store
         self.active: List[AdapterPack] = []
         self.history: List[SwitchStats] = []
+
+    def _resolve(self, pack) -> AdapterPack:
+        if isinstance(pack, str):
+            if self.store is None:
+                raise ValueError(f"adapter named by id {pack!r} but no "
+                                 "AdapterStore attached")
+            return self.store.get(pack)
+        return pack
 
     def _apply(self, pack: AdapterPack, sign: float):
         self.params = apply_pack(self.params, pack, sign=sign)
 
-    def load(self, pack: AdapterPack) -> SwitchStats:
+    def load(self, pack) -> SwitchStats:
+        pack = self._resolve(pack)
         t0 = time.perf_counter()
         self._apply(pack, +1.0)
         jax.block_until_ready(jax.tree.leaves(self.params)[0])
@@ -71,18 +114,19 @@ class SwitchEngine:
         self.history.append(st)
         return st
 
-    def switch(self, pack: AdapterPack) -> SwitchStats:
+    def switch(self, pack) -> SwitchStats:
         """unload current -> load new; the paper's rapid-switch operation."""
         while self.active:
             self.unload()
         return self.load(pack)
 
-    def load_fused(self, packs: List[AdapterPack],
+    def load_fused(self, packs: List,
                    weights: Optional[List[float]] = None) -> List[SwitchStats]:
         """Multi-adapter fusion by naive addition (paper Fig. 3(b))."""
         weights = weights or [1.0] * len(packs)
         out = []
         for p, w in zip(packs, weights):
+            p = self._resolve(p)
             scaled = AdapterPack(p.name, p.entries, alpha=p.alpha * w)
             out.append(self.load(scaled))
         return out
@@ -103,7 +147,10 @@ class LoraEngine:
             if isinstance(tree, dict):
                 return {k: walk(v, prefix + (str(k),)) for k, v in tree.items()}
             if isinstance(tree, (list, tuple)):
-                return [walk(v, prefix + (str(i),)) for i, v in enumerate(tree)]
+                # type-preserving, like apply_pack's walk: returning a list
+                # for a tuple node corrupts the pytree structure
+                t = [walk(v, prefix + (str(i),)) for i, v in enumerate(tree)]
+                return tuple(t) if isinstance(tree, tuple) else t
             key = "/".join(prefix)
             if key in lora:
                 t = lora[key]
@@ -130,10 +177,11 @@ class LoraEngine:
 @dataclass
 class FusedDecision:
     """One scheduling step: fuse ``promote`` into the shared base (after
-    un-fusing ``demote``), or leave things alone (both None)."""
+    un-fusing ``demote``), or leave things alone (both None). Either side
+    may be a single adapter name or an adapter-stack tuple."""
 
-    promote: Optional[str] = None
-    demote: Optional[str] = None
+    promote: Optional[Tenant] = None
+    demote: Optional[Tenant] = None
 
 
 class FusedLRU:
@@ -147,34 +195,44 @@ class FusedLRU:
     packs (their delta minus the fused one). This object only decides WHO is
     fused — the engine applies the scatter and rebuilds its tables.
 
-    Policy: an exponential moving average of each adapter's share of batch
-    traffic, plus a recency stamp. An adapter is promoted when its share
-    crosses ``promote_at``; the fused adapter is demoted back to side-delta
+    Policy: an exponential moving average of each tenant's share of batch
+    traffic, plus a recency stamp. A tenant is promoted when its share
+    crosses ``promote_at``; the fused tenant is demoted back to side-delta
     form when its share decays below ``demote_at`` or when it has been unused
-    for ``max_idle`` scheduling steps (the LRU part). At most one adapter is
-    fused at a time: fusing several would make the shared base equal to the
-    *sum* of their deltas, which no single tenant wants.
+    for ``max_idle`` scheduling steps (the LRU part). The fused state holds
+    exactly one *tenant* at a time: fusing two distinct tenants would make
+    the shared base equal to the sum of their deltas, which neither wants.
+    A tenant may however be an adapter *stack* (a tuple of names served
+    together, e.g. agent stacks) — ``capacity`` bounds how many adapters a
+    promotable stack may contain, so ``capacity=2`` fuses a hot pair in one
+    transition while singles-only traffic behaves exactly as ``capacity=1``.
+    Ties in share are broken deterministically by tenant name (lexicographic
+    on the "a+b" key), never by dict insertion order.
     """
 
     def __init__(self, promote_at: float = 0.5, demote_at: float = 0.2,
-                 decay: float = 0.5, max_idle: int = 8):
+                 decay: float = 0.5, max_idle: int = 8, capacity: int = 1):
         assert 0.0 <= demote_at <= promote_at <= 1.0
+        assert capacity >= 1
         self.promote_at = promote_at
         self.demote_at = demote_at
         self.decay = decay
         self.max_idle = max_idle
-        self.share: Dict[str, float] = {}
-        self.last_used: Dict[str, int] = {}
+        self.capacity = capacity
+        self.share: Dict[Tenant, float] = {}
+        self.last_used: Dict[Tenant, int] = {}
         self.step = 0
-        self.fused: Optional[str] = None
+        self.fused: Optional[Tenant] = None
 
-    def observe(self, names: List[Optional[str]]) -> FusedDecision:
-        """Record one batch of per-request adapter names (None = base model)
-        and return the promotion/demotion to apply before serving it."""
+    def observe(self, names: Sequence) -> FusedDecision:
+        """Record one batch of per-request tenants (None = base model, str =
+        one adapter, tuple = adapter stack) and return the promotion/demotion
+        to apply before serving it."""
         self.step += 1
         n = max(len(names), 1)
-        counts: Dict[str, int] = {}
+        counts: Dict[Tenant, int] = {}
         for name in names:
+            name = normalize_tenant(name)
             if name is not None:
                 counts[name] = counts.get(name, 0) + 1
                 self.last_used[name] = self.step
@@ -197,7 +255,12 @@ class FusedLRU:
             if (self.share.get(self.fused, 0.0) < self.demote_at
                     or idle >= self.max_idle):
                 decision.demote = self.fused
-        hot = max(self.share, key=self.share.get, default=None)
+        eligible = [name for name in self.share
+                    if len(tenant_members(name)) <= self.capacity]
+        # min over (-share, key): highest share wins, equal shares resolve
+        # to the lexicographically-first tenant (stable across runs)
+        hot = min(eligible, key=lambda m: (-self.share[m], tenant_key(m)),
+                  default=None)
         if (hot is not None and hot != self.fused
                 and self.share[hot] >= self.promote_at):
             if self.fused is not None:
@@ -210,10 +273,20 @@ class FusedLRU:
         return decision
 
 
+@jax.jit
+def _diff_counts(xs, ys):
+    return [jnp.sum(jnp.not_equal(a, b)) for a, b in zip(xs, ys)]
+
+
 def changed_fraction(base, switched) -> float:
-    """%C from the paper's tables: fraction of weights differing from base."""
-    tot, diff = 0, 0
-    for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(switched)):
-        tot += a.size
-        diff += int(jnp.sum(jnp.not_equal(a, b)))
+    """%C from the paper's tables: fraction of weights differing from base.
+
+    All per-leaf comparisons run in ONE jitted computation with a single
+    host sync at the end — the old per-leaf ``int(jnp.sum(...))`` did a
+    blocking device round-trip per leaf, which dominated the switching
+    benchmarks on deep stacks."""
+    a = jax.tree.leaves(base)
+    b = jax.tree.leaves(switched)
+    tot = sum(x.size for x in a)
+    diff = sum(int(c) for c in jax.device_get(_diff_counts(a, b)))
     return diff / max(tot, 1)

@@ -1,0 +1,40 @@
+"""repro.hub — one adapter-lifecycle API (train -> pack -> store -> serve).
+
+The paper's deployment story (§3.2, Fig. 3) is that a SHiRA adapter is a
+cheap artifact: 1-2% of the weights you can load, fuse, and switch at will.
+This package is the single surface that story runs through:
+
+                 train (core.init_adapter / materialize)
+                     |
+                     v  pack_from_shira / pack_from_delta
+               AdapterPack  ----------------------------------+
+                     |                                        |
+        save_pack    |   load_pack (f32 bit-exact /           |
+        (format v2,  |    bf16 / int8 ~2 B per nonzero)       |
+         checksum)   v                                        |
+               .shpk file on disk                             |
+                     |                                        |
+                     v  register_file / add                   |
+               AdapterStore  (LRU residency under a           |
+                     |        byte budget; immutable handles) |
+                     v                                        v
+        +------------+--------------+------------------+
+        |                           |                  |
+   SwitchEngine.load("id")   MultiTenantEngine    ServingEngine.submit(
+   (rapid switch: sparse     .register("id")       prompt, adapter) -> future
+    scatter, paper Fig. 5)   (batched side-       (continuous batching:
+        |                     deltas, FusedLRU     per-slot adapter ids +
+        v                     group fuse/demote)   positions, slot recycling
+   fused inference                 |               on EOS)
+                                   +------ one shared base + Pallas
+                                           ``sidedelta`` forward ------+
+
+Everything downstream of ``AdapterPack`` also accepts adapter *ids*: attach
+an ``AdapterStore`` and the engines resolve names to resident packs on
+demand, so a fleet of thousands of tenants pays only for its working set
+(int8 packs keep >=3x more tenants resident in the same budget).
+"""
+from repro.hub.packio import (PackFormatError, QuantPack,  # noqa: F401
+                              load_pack, peek_pack, save_pack)
+from repro.hub.serving import ServeFuture, ServingEngine  # noqa: F401
+from repro.hub.store import AdapterStore  # noqa: F401

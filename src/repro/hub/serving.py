@@ -1,0 +1,239 @@
+"""ServingEngine: request-level serving with continuous batching.
+
+The fixed-batch multi-tenant path (``MultiTenantEngine.generate``) decodes a
+*batch* as one unit: every request enters at step 0 and the whole batch runs
+until the longest request finishes. This engine serves *requests*:
+
+  fut = engine.submit(prompt_tokens, adapter="a0", max_tokens=32)
+  engine.run()                 # or step() from your own loop
+  out = fut.result()           # (n,) int32 generated tokens
+
+Internally there are ``slots`` decode lanes sharing ONE jitted decode step
+and one cache allocation. Each slot carries its own adapter id (routed
+through the MultiTenantEngine side-delta tables — an adapter name, an
+adapter stack, or base) and its own cache position: the decode step takes a
+(B,) position vector (``models.attention`` per-slot decode), so lanes at
+different depths coexist in one forward pass. When a request hits EOS or
+its token budget, its future resolves and the slot is recycled to the next
+queued request at the following step — no drain barrier, which is what
+keeps utilization high under mixed-length traffic.
+
+Admission runs the request's prefill at batch 1 with its own adapter and
+splices the resulting KV/SSM cache into the slot's lane of the shared cache
+(``dynamic_update_slice`` along the batch axis). Greedy decode is used
+throughout, so a request's tokens are identical to what the fixed-batch
+engine produces for the same prompt+adapter — the parity tests pin this
+token-for-token.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.switching import FusedLRU, Tenant, normalize_tenant
+from repro.models import lm
+from repro.serving.multitenant import MultiTenantEngine
+
+
+class ServeFuture:
+    """Resolves when the request's final token is generated."""
+
+    def __init__(self, rid: int, adapter: Tenant, max_tokens: int):
+        self.rid = rid
+        self.adapter = adapter
+        self.max_tokens = max_tokens
+        self.tokens: List[int] = []
+        self.submitted_step: Optional[int] = None
+        self.finished_step: Optional[int] = None
+        self._done = False
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> np.ndarray:
+        if not self._done:
+            raise RuntimeError(f"request {self.rid} still in flight "
+                               f"({len(self.tokens)}/{self.max_tokens} tokens)"
+                               " — drive the engine with step()/run()")
+        return np.asarray(self.tokens, np.int32)
+
+
+class _Pending:
+    def __init__(self, fut: ServeFuture, prompt: np.ndarray,
+                 eos_id: Optional[int]):
+        self.fut = fut
+        self.prompt = prompt
+        self.eos_id = eos_id
+
+
+def _slot_insert(big, small, slot: int):
+    """Splice a batch-1 cache tree into lane ``slot`` of the shared cache.
+
+    The batch axis differs per leaf kind (KV caches carry scan-stack dims in
+    front, hybrid mamba caches two of them) — it is recovered per leaf as
+    the unique axis where the shapes differ (1 vs slots)."""
+    def leaf(bg, sm):
+        diff = [ax for ax, (a, b) in enumerate(zip(bg.shape, sm.shape))
+                if a != b]
+        if not diff:          # slots == 1: the lane IS the whole cache
+            return sm.astype(bg.dtype)
+        assert len(diff) == 1, (bg.shape, sm.shape)
+        return jax.lax.dynamic_update_slice_in_dim(
+            bg, sm.astype(bg.dtype), slot, axis=diff[0])
+    return jax.tree.map(leaf, big, small)
+
+
+class ServingEngine:
+    """Continuous-batching front end over the multi-tenant side-delta path."""
+
+    def __init__(self, cfg, params, *, slots: int = 4, cache_size: int = 128,
+                 scheduler: Optional[FusedLRU] = None, store=None):
+        if cfg.encoder_only:
+            raise ValueError("encoder-only archs have no decode serving path")
+        self.cfg = cfg
+        self.slots = slots
+        # the batch-axis splice recovers the lane axis as "the axis whose
+        # size differs"; cache_size == slots would make it ambiguous
+        self.cache_size = cache_size + 1 if cache_size == slots else cache_size
+        self.engine = MultiTenantEngine(cfg, params, scheduler=scheduler,
+                                        store=store)
+        self.caches = lm.init_cache(cfg, slots, self.cache_size)
+        self._active: List[Optional[_Pending]] = [None] * slots
+        self._pos = np.zeros((slots,), np.int32)      # next cache write index
+        self._last = np.zeros((slots,), np.int32)     # last generated token
+        self._queue: "deque[_Pending]" = deque()
+        self._rid = 0
+        self.step_count = 0
+        self.tokens_out = 0
+        self.decode_slot_waste = 0    # idle-lane decode steps (utilization)
+
+    # ------------------------------------------------------------------
+    # Request API
+    # ------------------------------------------------------------------
+
+    def register(self, pack) -> None:
+        self.engine.register(pack)
+
+    def submit(self, prompt_tokens, adapter: Tenant = None,
+               max_tokens: int = 16,
+               eos_id: Optional[int] = None) -> ServeFuture:
+        """Queue one request; returns its future. ``adapter`` is a registered
+        adapter id, a stack of ids, or None for the base model."""
+        prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
+        prefix = (self.cfg.num_prefix_embeds
+                  if self.cfg.modality == "vision" else 0)
+        need = prompt.shape[0] + prefix + max_tokens
+        if need > self.cache_size:
+            raise ValueError(f"prompt ({prompt.shape[0]}) + max_tokens "
+                             f"({max_tokens}) needs {need} cache slots, "
+                             f"engine has {self.cache_size}")
+        if max_tokens < 1:
+            raise ValueError("max_tokens must be >= 1")
+        adapter = normalize_tenant(adapter)
+        from repro.core.switching import tenant_members
+        for m in tenant_members(adapter):
+            if m not in self.engine.packs:
+                store = self.engine.store
+                if store is not None and m in store:
+                    self.engine.register(m)   # lazy: pull it from the store
+                else:
+                    raise KeyError(f"request names unregistered adapter "
+                                   f"{m!r}")
+        fut = ServeFuture(self._rid, adapter, max_tokens)
+        self._rid += 1
+        self._queue.append(_Pending(fut, prompt, eos_id))
+        return fut
+
+    def pending(self) -> int:
+        return len(self._queue) + sum(p is not None for p in self._active)
+
+    # ------------------------------------------------------------------
+    # Scheduling loop
+    # ------------------------------------------------------------------
+
+    def _batch_for(self, prompt: np.ndarray) -> Dict[str, Any]:
+        batch = {"tokens": jnp.asarray(prompt[None])}
+        if self.cfg.modality == "vision":
+            batch["patch_embeds"] = jnp.zeros(
+                (1, self.cfg.num_prefix_embeds, self.cfg.d_model))
+        return batch
+
+    def _finish(self, slot: int) -> None:
+        p = self._active[slot]
+        p.fut.finished_step = self.step_count
+        p.fut._done = True
+        self._active[slot] = None
+        self._pos[slot] = 0
+        self._last[slot] = 0
+
+    def _emit(self, slot: int, token: int) -> None:
+        """Record one generated token. ``_pos`` is NOT touched here — it
+        always points at the cache index the next decode step writes to."""
+        p = self._active[slot]
+        p.fut.tokens.append(int(token))
+        self.tokens_out += 1
+        self._last[slot] = token
+        if (len(p.fut.tokens) >= p.fut.max_tokens
+                or (p.eos_id is not None and int(token) == p.eos_id)):
+            self._finish(slot)
+
+    def _admit(self, slot: int, p: _Pending) -> None:
+        names: List[Tenant] = [p.fut.adapter]
+        ids = self.engine.ids_for(names)
+        wp = self.engine.wrapped_params(ids)
+        logits, c1 = self.engine._prefill(wp, self._batch_for(p.prompt),
+                                          self.cache_size)
+        self.caches = _slot_insert(self.caches, c1, slot)
+        prefix = (self.cfg.num_prefix_embeds
+                  if self.cfg.modality == "vision" else 0)
+        self._active[slot] = p
+        p.fut.submitted_step = self.step_count
+        self._pos[slot] = p.prompt.shape[0] + prefix
+        first = int(np.argmax(np.asarray(logits[0])))
+        self._emit(slot, first)
+
+    def step(self) -> bool:
+        """Admit queued requests into free slots, then run one decode step
+        over every occupied lane. Returns False when fully drained."""
+        for slot in range(self.slots):
+            if self._active[slot] is None and self._queue:
+                self._admit(slot, self._queue.popleft())
+        live = [s for s in range(self.slots) if self._active[s] is not None]
+        if not live:
+            return bool(self._queue)
+        self.step_count += 1
+        self.decode_slot_waste += self.slots - len(live)
+        names = [self._active[s].fut.adapter
+                 if self._active[s] is not None else None
+                 for s in range(self.slots)]
+        # the scheduler sees only live lanes: idle slots are not base-model
+        # traffic, and counting them would dilute every tenant's share
+        self.engine.schedule([names[s] for s in live])
+        ids = self.engine.ids_for(names)
+        wp = self.engine.wrapped_params(ids)
+        toks = jnp.asarray(self._last[:, None])
+        logits, self.caches = self.engine._decode(
+            wp, toks, self.caches, jnp.asarray(self._pos))
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for s in live:
+            self._pos[s] += 1          # this step's KV landed at _pos[s]
+            self._emit(s, int(nxt[s]))
+        return True
+
+    def run(self, max_steps: int = 100_000) -> float:
+        """Drive step() until every queued request resolved; returns
+        wall-clock seconds."""
+        t0 = time.perf_counter()
+        for _ in range(max_steps):
+            if not self.step() and not self._queue \
+                    and all(p is None for p in self._active):
+                break
+        else:
+            raise RuntimeError(f"run() hit max_steps={max_steps} with "
+                               f"{self.pending()} requests in flight")
+        return time.perf_counter() - t0

@@ -1,0 +1,143 @@
+"""AdapterStore: the adapter registry every engine loads through.
+
+A store maps adapter ids to pack files on disk (format v2, ``packio``) and
+keeps a bounded working set resident in memory. Engines never open files
+themselves — ``SwitchEngine``, ``MultiTenantEngine``, and the benchmarks ask
+the store by name and get back an immutable ``AdapterPack`` handle:
+
+  store = AdapterStore(root, budget_bytes=64 << 20)
+  store.add(pack, values="int8")        # serialize + register
+  store.register_file("a0.shpk")        # register an existing file (lazy)
+  engine.register(store.get("a0"))      # or engine.register("a0")
+
+Residency: the resident form is whatever the file stores — f32 packs stay
+f32, int8 packs stay in their ~2-byte/entry ``QuantPack`` form and are only
+dequantized at the ``get`` boundary, so an int8 store holds >=3x more
+tenants in the same budget. When loading a pack would exceed
+``budget_bytes``, least-recently-used residents are dropped (their files
+remain; a later ``get`` reloads). Packs added with ``pin=True`` — or added
+in-memory with no backing file — are never evicted.
+
+Handles are immutable by contract: entries are jax/np arrays shared with
+the store's resident copy; engines must never write into them (they never
+do — loading is a scatter-add into the engine's own weights).
+"""
+from __future__ import annotations
+
+import os
+from collections import OrderedDict
+from typing import Dict, List, Optional, Union  # noqa: F401 (Union: annot.)
+
+from repro.core.adapters import AdapterPack
+from repro.hub.packio import (QuantPack, load_pack, peek_pack,
+                              quantize_pack, save_pack)
+
+
+class AdapterStore:
+    def __init__(self, root: Optional[str] = None,
+                 budget_bytes: Optional[int] = None):
+        self.root = root
+        if root is not None:
+            os.makedirs(root, exist_ok=True)
+        self.budget_bytes = budget_bytes
+        self._paths: Dict[str, Optional[str]] = {}    # id -> file (None = mem)
+        self._pinned: set = set()
+        # id -> resident AdapterPack | QuantPack, LRU order (oldest first)
+        self._resident: "OrderedDict[str, Union[AdapterPack, QuantPack]]" \
+            = OrderedDict()
+        self.loads = 0                                # disk loads (cache miss)
+        self.evictions = 0
+
+    # ------------------------------------------------------------------
+    # Registration
+    # ------------------------------------------------------------------
+
+    def add(self, pack: AdapterPack, values: str = "f32",
+            pin: bool = False) -> str:
+        """Serialize ``pack`` into the store's root (or keep it in memory if
+        the store has no root) and register it. Returns the adapter id."""
+        if self.root is None:
+            if values == "bf16":
+                raise ValueError("bf16 pack storage needs a file-backed "
+                                 "store (root=None holds f32 or int8)")
+            form = quantize_pack(pack) if values == "int8" else pack
+            self._paths[pack.name] = None
+            self._pinned.add(pack.name)               # nothing to reload from
+            self._admit(pack.name, form)
+            return pack.name
+        path = os.path.join(self.root, f"{pack.name}.shpk")
+        save_pack(pack, path, values=values)
+        self._paths[pack.name] = path
+        if pin:
+            self._pinned.add(pack.name)
+        self._resident.pop(pack.name, None)           # re-add replaces
+        return pack.name
+
+    def register_file(self, path: str, name: Optional[str] = None,
+                      pin: bool = False) -> str:
+        """Register an existing pack file without reading its payload."""
+        name = name or peek_pack(path)["name"]
+        self._paths[name] = path
+        if pin:
+            self._pinned.add(name)
+        self._resident.pop(name, None)
+        return name
+
+    # ------------------------------------------------------------------
+    # Lookup
+    # ------------------------------------------------------------------
+
+    def names(self) -> List[str]:
+        return sorted(self._paths)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._paths
+
+    def get(self, name: str) -> AdapterPack:
+        """Immutable pack handle; loads from disk (and evicts LRU residents
+        past the byte budget) on a miss."""
+        if name not in self._paths:
+            raise KeyError(f"unknown adapter {name!r}; registered: "
+                           f"{self.names()}")
+        form = self._resident.get(name)
+        if form is None:
+            path = self._paths[name]
+            assert path is not None, f"in-memory pack {name!r} lost"
+            form = load_pack(path, dequantize=False)
+            self.loads += 1
+            self._admit(name, form)
+        else:
+            self._resident.move_to_end(name)
+        return form.dequantize() if isinstance(form, QuantPack) else form
+
+    # ------------------------------------------------------------------
+    # Residency accounting
+    # ------------------------------------------------------------------
+
+    def resident_bytes(self) -> int:
+        return sum(f.nbytes() for f in self._resident.values())
+
+    def resident_names(self) -> List[str]:
+        """LRU order, oldest first."""
+        return list(self._resident)
+
+    def _admit(self, name: str, form) -> None:
+        self._resident[name] = form
+        self._resident.move_to_end(name)
+        if self.budget_bytes is None:
+            return
+        while self.resident_bytes() > self.budget_bytes:
+            victim = next((n for n in self._resident
+                           if n != name and n not in self._pinned), None)
+            if victim is None:
+                break            # only the newcomer/pinned left: keep it
+            del self._resident[victim]
+            self.evictions += 1
+
+    def evict(self, name: str) -> bool:
+        """Drop a resident form explicitly (the file stays registered)."""
+        if name in self._resident and self._paths.get(name) is not None:
+            del self._resident[name]
+            self.evictions += 1
+            return True
+        return False

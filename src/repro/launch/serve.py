@@ -20,9 +20,23 @@ form. Flags:
                         adapter_0 (the rest spread uniformly); high skew
                         exercises the scheduler's promote path
 
+Continuous batching (``--continuous``): the request-level path. Instead of
+fixed-size batch streams, requests are submitted one by one to
+``repro.hub.ServingEngine`` (``submit(prompt, adapter) -> future``): each
+decode lane carries its own adapter id and cache position, finished
+requests recycle their lane immediately, and all packs are resolved through
+a ``repro.hub.AdapterStore`` (``--int8`` stores them quantized, ~3-4x
+smaller resident bytes). Extra flags:
+  --continuous          serve a request trace through the ServingEngine
+  --requests N          how many requests to stream (continuous)
+  --slots N             decode lanes (continuous; default --batch)
+  --int8                keep adapters int8-quantized in the store
+
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-7b --smoke \
       --multi-tenant --adapters 3 --tokens 16 --batch 8 --batches 4
+  PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-7b --smoke \
+      --continuous --adapters 3 --tokens 16 --slots 4 --requests 12
 """
 from __future__ import annotations
 
@@ -96,6 +110,36 @@ def serve_multi_tenant(cfg, params, packs, args) -> None:
           f"{engine.fuse_transitions} fused-state transitions")
 
 
+def serve_continuous(cfg, params, packs, args) -> None:
+    import tempfile
+
+    from numpy.random import default_rng
+    from repro.hub import AdapterStore, ServingEngine
+
+    store = AdapterStore(tempfile.mkdtemp(prefix="adapter-store-"))
+    for p in packs:
+        store.add(p, values="int8" if args.int8 else "f32")
+    slots = args.slots or args.batch
+    engine = ServingEngine(
+        cfg, params, slots=slots, store=store,
+        cache_size=args.prompt_len + args.tokens + 8
+        + (cfg.num_prefix_embeds if cfg.modality == "vision" else 0))
+    rng = default_rng(0)
+    futs = []
+    for r in range(args.requests):
+        name = tenant_mix(rng, packs, 1, args.skew)[0]
+        toks = jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(1), r),
+                                  (args.prompt_len,), 0, cfg.vocab_size)
+        futs.append(engine.submit(toks, name, max_tokens=args.tokens))
+    dt = engine.run()
+    done = sum(f.done() for f in futs)
+    print(f"[serve-cc] {done}/{len(futs)} requests, {engine.tokens_out} "
+          f"tokens in {dt*1e3:.0f}ms ({engine.tokens_out/dt:.1f} tok/s), "
+          f"{engine.step_count} decode steps, idle-lane steps "
+          f"{engine.decode_slot_waste}, store loads={store.loads} "
+          f"resident={store.resident_bytes()/1e3:.1f}kB")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-780m")
@@ -112,6 +156,14 @@ def main() -> None:
                     help="request batches to stream (multi-tenant)")
     ap.add_argument("--skew", type=float, default=0.5,
                     help="fraction of requests routed to adapter_0")
+    ap.add_argument("--continuous", action="store_true",
+                    help="request-level serving via repro.hub.ServingEngine")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="requests to stream (continuous)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode lanes (continuous; 0 = --batch)")
+    ap.add_argument("--int8", action="store_true",
+                    help="int8-quantized adapter store (continuous)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -120,7 +172,10 @@ def main() -> None:
     key = jax.random.PRNGKey(0)
     params = lm.init_params(cfg, key)
     packs = make_adapters(cfg, params, args.adapters, jax.random.PRNGKey(7),
-                          multi_tenant=args.multi_tenant)
+                          multi_tenant=args.multi_tenant or args.continuous)
+    if args.continuous:
+        serve_continuous(cfg, params, packs, args)
+        return
     if args.multi_tenant:
         serve_multi_tenant(cfg, params, packs, args)
         return

@@ -35,7 +35,9 @@ class KVCache(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def _attend_block(q, k, v, q_pos, k_pos, causal, prefix_len, kv_len=None):
-    """q: (B, qc, H, D); k,v: (B, Sk, KV, Dk|Dv); positions are (qc,), (Sk,).
+    """q: (B, qc, H, D); k,v: (B, Sk, KV, Dk|Dv); positions are (qc,) or
+    (B, qc) for per-request decode offsets, and (Sk,). ``kv_len`` may be a
+    scalar or (B,) per-request filled-cache length.
 
     Returns (B, qc, H, Dv). GQA grouping happens here without repeating KV.
     """
@@ -47,15 +49,18 @@ def _attend_block(q, k, v, q_pos, k_pos, causal, prefix_len, kv_len=None):
     scores = jnp.einsum(
         "bqkgd,bskd->bkgqs", qg.astype(compute_dtype()), k.astype(compute_dtype()),
         preferred_element_type=jnp.float32) * scale
-    mask = jnp.ones((qc, Sk), bool)
+    qp = q_pos if q_pos.ndim == 2 else q_pos[None]    # (B|1, qc)
+    mask = jnp.ones((qp.shape[0], qc, Sk), bool)
     if causal:
-        cm = q_pos[:, None] >= k_pos[None, :]
+        cm = qp[:, :, None] >= k_pos[None, None, :]
         if prefix_len > 0:  # prefix-LM: prefix tokens are globally visible
-            cm = cm | (k_pos[None, :] < prefix_len)
+            cm = cm | (k_pos[None, None, :] < prefix_len)
         mask = mask & cm
     if kv_len is not None:  # only the filled part of the cache is valid
-        mask = mask & (k_pos[None, :] < kv_len)
-    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        kl = jnp.asarray(kv_len)
+        kl = kl[:, None, None] if kl.ndim == 1 else kl
+        mask = mask & (k_pos[None, None, :] < kl)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype())
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(compute_dtype()),
                      preferred_element_type=compute_dtype())
@@ -197,16 +202,33 @@ def gqa_prefill(params, cfg: ModelConfig, x, cache_size: int, *,
     return dense(out.reshape(B, S, -1), params["wo"]), cache
 
 
+def _decode_positions(pos) -> Tuple[jax.Array, bool]:
+    """Rope positions for one decode step: pos may be a scalar (whole batch
+    at one index — the fixed-batch serving path) or a (B,) vector of
+    per-request indices (continuous batching: every slot is mid-stream at
+    its own depth). Returns (positions (1,)|(B, 1), is_vector)."""
+    p = jnp.asarray(pos)
+    if p.ndim == 0:
+        return jnp.full((1,), p), False
+    return p[:, None], True
+
+
 def gqa_decode(params, cfg: ModelConfig, x, cache: KVCache, pos) -> Tuple[jax.Array, KVCache]:
-    """x: (B, 1, d); pos: scalar index where the new token lands."""
+    """x: (B, 1, d); pos: scalar index where the new token lands, or (B,)
+    per-request indices."""
     B = x.shape[0]
-    positions = jnp.full((1,), pos)
+    positions, vector = _decode_positions(pos)
     q, k, v = _gqa_qkv(params, cfg, x, positions)
-    ck = jax.lax.dynamic_update_slice(cache.k, k.astype(compute_dtype()), (0, pos, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache.v, v.astype(compute_dtype()), (0, pos, 0, 0))
+    if vector:
+        b = jnp.arange(B)
+        ck = cache.k.at[b, pos].set(k.astype(compute_dtype())[:, 0])
+        cv = cache.v.at[b, pos].set(v.astype(compute_dtype())[:, 0])
+    else:
+        ck = jax.lax.dynamic_update_slice(cache.k, k.astype(compute_dtype()), (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v.astype(compute_dtype()), (0, pos, 0, 0))
     out = _attend_block(q, _maybe_repeat_kv(cfg, ck), _maybe_repeat_kv(cfg, cv),
                         positions, jnp.arange(ck.shape[1]),
-                        causal=True, prefix_len=0, kv_len=pos + 1)
+                        causal=True, prefix_len=0, kv_len=jnp.asarray(pos) + 1)
     return dense(out.reshape(B, 1, -1), params["wo"]), KVCache(ck, cv)
 
 
@@ -311,13 +333,18 @@ def mla_decode(params, cfg: ModelConfig, x, cache: KVCache, pos) -> Tuple[jax.Ar
     m = cfg.mla
     B = x.shape[0]
     H = cfg.num_heads
-    positions = jnp.full((1,), pos)
+    positions, vector = _decode_positions(pos)
     q_nope, q_rope = _mla_q(params, cfg, x, positions)     # (B,1,H,·)
     c_kv_new, k_rope_new = _mla_ckv(params, cfg, x, positions)
-    cc = jax.lax.dynamic_update_slice(cache.k, c_kv_new.astype(compute_dtype()),
-                                      (0, pos, 0))
-    cr = jax.lax.dynamic_update_slice(cache.v, k_rope_new.astype(compute_dtype()),
-                                      (0, pos, 0))
+    if vector:
+        b = jnp.arange(B)
+        cc = cache.k.at[b, pos].set(c_kv_new.astype(compute_dtype())[:, 0])
+        cr = cache.v.at[b, pos].set(k_rope_new.astype(compute_dtype())[:, 0])
+    else:
+        cc = jax.lax.dynamic_update_slice(cache.k, c_kv_new.astype(compute_dtype()),
+                                          (0, pos, 0))
+        cr = jax.lax.dynamic_update_slice(cache.v, k_rope_new.astype(compute_dtype()),
+                                          (0, pos, 0))
     # Absorb W_uk into q: q_eff[b,h,r] = sum_n q_nope[b,1,h,n] * W_uk[r, h*n]
     # (f32 einsums: decode-step FLOPs are negligible; avoids CPU bf16-dot gaps)
     w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
@@ -328,7 +355,9 @@ def mla_decode(params, cfg: ModelConfig, x, cache: KVCache, pos) -> Tuple[jax.Ar
     scores = (jnp.einsum("bqhr,bsr->bhqs", q_eff, cc.astype(jnp.float32))
               + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
                            cr.astype(jnp.float32))) * scale
-    valid = jnp.arange(cc.shape[1])[None, None, None, :] <= pos
+    p = jnp.asarray(pos)
+    valid = jnp.arange(cc.shape[1])[None, None, None, :] <= (
+        p[:, None, None, None] if p.ndim == 1 else p)
     scores = jnp.where(valid, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out_lat = jnp.einsum("bhqs,bsr->bqhr", probs, cc.astype(jnp.float32))

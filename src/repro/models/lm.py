@@ -315,7 +315,9 @@ def _stage_decode(stage_params, kind, cfg, h, caches, pos, shared=None):
 
 
 def decode_step(params, cfg: ModelConfig, tokens, caches, pos):
-    """tokens: (B, 1) int32. Returns (logits (B, V), new caches)."""
+    """tokens: (B, 1) int32; pos: scalar cache index shared by the batch, or
+    a (B,) int32 vector of per-request indices (continuous batching — every
+    slot decodes at its own depth). Returns (logits (B, V), new caches)."""
     h = embed(params["embed"], tokens)
     new_caches = []
     for sp, cache, (kind, _) in zip(params["stages"], caches, stage_plan(cfg)):

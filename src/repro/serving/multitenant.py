@@ -17,12 +17,20 @@ which survive the LM's ``lax.scan`` over stacked layer weights (every table
 carries the weight's leading layer dims).
 
 Fused-state scheduling: with a ``core.switching.FusedLRU`` scheduler, the
-engine additionally fuses the *hot* adapter into the shared base (a single
+engine additionally fuses the *hot* tenant into the shared base (a single
 sparse scatter — the paper's rapid switch), so dominant-tenant requests skip
 the side term entirely. The other tenants are then served with diff packs
 (their delta minus the fused one, built by ``fusion.fuse_packs``), and base
 -model requests with the negated fused pack. Demotion scatters the delta
 back out and restores plain packs.
+
+Tenants need not be single adapters: a request may name an adapter *stack*
+(tuple of names) whose deltas are merged into one side pack, and a
+``FusedLRU(capacity>1)`` promotes a hot stack into the base as a group —
+diff packs are then group-aware (each tenant's delta minus the fused sum).
+Request-level serving with continuous batching lives one layer up, in
+``repro.hub.ServingEngine``, which drives this engine's prefill/decode with
+per-slot adapter ids and cache positions.
 
 Limitations: adapters on ``w_uk``/``w_uv`` (MLA absorbed-decode weights,
 consumed via reshape rather than a matmul) are rejected — exclude them from
@@ -31,7 +39,7 @@ consumed via reshape rather than a matmul) are rejected — exclude them from
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +47,9 @@ import numpy as np
 
 from repro.core.adapters import AdapterPack, apply_pack
 from repro.core.fusion import fuse_packs
-from repro.core.switching import FusedLRU, SwitchEngine
+from repro.core.switching import (FusedLRU, SwitchEngine, Tenant,
+                                  normalize_tenant, tenant_key,
+                                  tenant_members)
 from repro.kernels.ops import sidedelta_table
 from repro.models import lm
 from repro.models.layers import sidedelta_weight
@@ -128,18 +138,31 @@ def switch_per_request_reference(cfg, params, packs, toks, names,
 
 
 class MultiTenantEngine:
-    """Serves mixed-adapter batches off one shared base parameter tree."""
+    """Serves mixed-adapter batches off one shared base parameter tree.
 
-    def __init__(self, cfg, params, *, scheduler: Optional[FusedLRU] = None):
+    A request's tenant may be ``None`` (base model), one adapter name, or an
+    adapter *stack* — a tuple of names whose deltas are applied together
+    (the side pack is their merged sum). With a ``FusedLRU(capacity>1)``
+    scheduler a hot stack is fused into the shared base as a group, and
+    every other tenant is served with a group-aware diff pack (its delta
+    minus the fused sum). With an ``AdapterStore``, ``register`` also
+    accepts a registered adapter id instead of a pack object."""
+
+    def __init__(self, cfg, params, *, scheduler: Optional[FusedLRU] = None,
+                 store=None):
         self.cfg = cfg
-        self.shared = params                 # base (+ the fused pack, if any)
+        self.shared = params                 # base (+ the fused packs, if any)
         self.packs: Dict[str, AdapterPack] = {}
         self.scheduler = scheduler
-        self.fused: Optional[str] = None
+        self.store = store
+        self.fused: Optional[Tenant] = None
         self.fuse_transitions = 0            # promote/demote scatter count
         self._shapes = _leaf_shapes(params)
         self._tables: Dict[str, dict] = {}   # path -> rows/cols/vals arrays
-        self._slots: Dict[str, int] = {}     # tenant name -> table slot
+        self._slots: Dict[Any, int] = {}     # tenant -> table slot
+        self._stacks: Dict[Any, int] = {}    # multi-adapter tenant -> last use
+        self._batch_no = 0                   # ids_for calls (stack recency)
+        self.stack_ttl = 64                  # drop stacks idle this many calls
         self._dirty = False
         self._prefill = jax.jit(
             lambda p, b, cs: lm.prefill(p, self.cfg, b, cs),
@@ -151,7 +174,12 @@ class MultiTenantEngine:
     # Registration / side-delta tables
     # ------------------------------------------------------------------
 
-    def register(self, pack: AdapterPack) -> None:
+    def register(self, pack) -> None:
+        if isinstance(pack, str):
+            if self.store is None:
+                raise ValueError(f"adapter named by id {pack!r} but no "
+                                 "AdapterStore attached")
+            pack = self.store.get(pack)
         for path in pack.entries:
             leaf = path.rsplit("/", 1)[-1]
             if leaf in UNSUPPORTED_LEAVES:
@@ -162,37 +190,52 @@ class MultiTenantEngine:
             if path not in self._shapes:
                 raise KeyError(f"adapter {pack.name!r} targets unknown "
                                f"weight {path!r}")
-        if pack.name == self.fused:
+        if pack.name in tenant_members(self.fused):
             # un-fuse the OLD delta before replacing the pack, or the next
             # demote would subtract the new one from a base holding the old
             self._demote()
-            if self.scheduler is not None and \
-                    self.scheduler.fused == pack.name:
+            if self.scheduler is not None and pack.name in tenant_members(
+                    self.scheduler.fused):
                 self.scheduler.fused = None  # keep it re-promotable
         self.packs[pack.name] = pack
         self._dirty = True
 
-    def _side_packs(self) -> Dict[str, AdapterPack]:
+    def _tenants(self) -> set:
+        """Side-served tenants: every registered adapter singly, plus every
+        multi-adapter stack a request has named."""
+        return set(self.packs) | set(self._stacks)
+
+    def _side_packs(self) -> Dict[Any, AdapterPack]:
         """What each tenant's side delta must be, given the fused state."""
+        fused_m = tenant_members(self.fused)
         out = {}
-        for name, pack in self.packs.items():
-            if name == self.fused:
+        for t in self._tenants():
+            if t == self.fused:
                 continue                     # fused tenant rides the base
-            if self.fused is None:
-                out[name] = pack
+            members = tenant_members(t)
+            if not fused_m and len(members) == 1:
+                out[t] = self.packs[members[0]]
             else:
-                out[name] = fuse_packs([pack, self.packs[self.fused]],
-                                       weights=[1.0, -1.0],
-                                       name=f"{name}-minus-{self.fused}")
-        if self.fused is not None:           # base traffic must un-see it
-            out[_BASE_SLOT] = fuse_packs([self.packs[self.fused]],
-                                         weights=[-1.0],
-                                         name=f"-{self.fused}")
+                parts = ([self.packs[m] for m in members]
+                         + [self.packs[f] for f in fused_m])
+                weights = [1.0] * len(members) + [-1.0] * len(fused_m)
+                out[t] = fuse_packs(
+                    parts, weights=weights,
+                    name=(tenant_key(t) +
+                          (f"-minus-{tenant_key(self.fused)}" if fused_m
+                           else "")))
+        if fused_m:                          # base traffic must un-see it
+            out[_BASE_SLOT] = fuse_packs(
+                [self.packs[f] for f in fused_m],
+                weights=[-1.0] * len(fused_m),
+                name=f"-{tenant_key(self.fused)}")
         return out
 
     def _rebuild(self) -> None:
         side = self._side_packs()
-        self._slots = {name: i for i, name in enumerate(sorted(side))}
+        order = sorted(side, key=lambda t: t if isinstance(t, str)
+                       else tenant_key(t))
+        self._slots = {name: i for i, name in enumerate(order)}
         paths = sorted({p for pk in side.values() for p in pk.entries})
         tables: Dict[str, dict] = {}
         A = max(len(side), 1)
@@ -232,27 +275,29 @@ class MultiTenantEngine:
     def _demote(self) -> None:
         if self.fused is None:
             return
-        self.shared = apply_pack(self.shared, self.packs[self.fused],
-                                 sign=-1.0)
+        for m in tenant_members(self.fused):
+            self.shared = apply_pack(self.shared, self.packs[m], sign=-1.0)
         self.fused = None
         self.fuse_transitions += 1
         self._dirty = True
 
-    def _promote(self, name: str) -> None:
-        if name == self.fused:
+    def _promote(self, tenant: Tenant) -> None:
+        tenant = normalize_tenant(tenant)
+        if tenant == self.fused or tenant is None:
             return
         self._demote()
-        self.shared = apply_pack(self.shared, self.packs[name], sign=+1.0)
-        self.fused = name
+        for m in tenant_members(tenant):
+            self.shared = apply_pack(self.shared, self.packs[m], sign=+1.0)
+        self.fused = tenant
         self.fuse_transitions += 1
         self._dirty = True
 
-    def schedule(self, names: Sequence[Optional[str]]) -> None:
+    def schedule(self, names: Sequence) -> None:
         """Consult the scheduler for this batch's traffic; apply its
         promote/demote before serving."""
         if self.scheduler is None:
             return
-        d = self.scheduler.observe(list(names))
+        d = self.scheduler.observe([normalize_tenant(n) for n in names])
         if d.promote is not None:
             self._promote(d.promote)
         elif d.demote is not None:
@@ -262,17 +307,35 @@ class MultiTenantEngine:
     # Forward passes
     # ------------------------------------------------------------------
 
-    def ids_for(self, names: Sequence[Optional[str]]) -> jax.Array:
+    def ids_for(self, names: Sequence) -> jax.Array:
+        norm = [normalize_tenant(n) for n in names]
+        self._batch_no += 1
+        for t in norm:
+            for m in tenant_members(t):
+                if m not in self.packs:
+                    raise KeyError(f"request names unregistered adapter "
+                                   f"{m!r}")
+            if t is not None and not isinstance(t, str):
+                if t not in self._stacks:
+                    self._dirty = True       # new stack -> needs a slot
+                self._stacks[t] = self._batch_no
+        # retire stacks that left the traffic mix, or table slots (and
+        # rebuild work per new ad-hoc combination) grow without bound
+        for t in [t for t, used in self._stacks.items()
+                  if t != self.fused
+                  and self._batch_no - used > self.stack_ttl]:
+            del self._stacks[t]
+            self._dirty = True
         if self._dirty:
             self._rebuild()
         ids = []
-        for name in names:
-            if name == self.fused or (name is BASE and self.fused is None):
+        for t in norm:
+            if t == self.fused or (t is BASE and self.fused is None):
                 ids.append(-1)               # pure shared base
-            elif name is BASE:
+            elif t is BASE:
                 ids.append(self._slots[_BASE_SLOT])
             else:
-                ids.append(self._slots[name])
+                ids.append(self._slots[t])
         return jnp.asarray(ids, jnp.int32)
 
     def wrapped_params(self, ids: jax.Array):

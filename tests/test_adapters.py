@@ -233,3 +233,37 @@ def test_shira_dora_changes_only_masked_entries(setup):
     eff = core.materialize(params, t, aux, acfg)
     ch = core.switching.changed_fraction(params, eff)
     assert ch < 0.2, f"shira-dora must stay sparse in fused mode: %C={ch}"
+
+
+def test_lora_engine_fuse_preserves_tuple_structure():
+    """Regression: LoraEngine.fuse's tree walk returned a list for BOTH
+    list and tuple nodes, corrupting the pytree structure of tuple-bearing
+    param trees (jit caches and tree_maps then mismatch)."""
+    params = {"stages": ({"wq": jnp.ones((4, 4))},
+                         {"wq": jnp.ones((4, 4))}),
+              "aux": [jnp.zeros((2, 2))]}
+    lora = {"stages/0/wq": {"A": jnp.ones((4, 2)), "B": jnp.ones((2, 4))}}
+    eng = core.LoraEngine(params)
+    eng.fuse(lora, scale=0.5)
+    assert (jax.tree_util.tree_structure(eng.params)
+            == jax.tree_util.tree_structure(params))
+    assert isinstance(eng.params["stages"], tuple)
+    assert isinstance(eng.params["aux"], list)
+    np.testing.assert_allclose(np.asarray(eng.params["stages"][0]["wq"]),
+                               1.0 + 0.5 * 2.0)
+    np.testing.assert_allclose(np.asarray(eng.params["stages"][1]["wq"]), 1.0)
+    eng.unfuse()
+    np.testing.assert_allclose(np.asarray(eng.params["stages"][0]["wq"]), 1.0)
+
+
+def test_changed_fraction_single_jitted_reduction():
+    """changed_fraction must stay correct after being batched into one
+    jitted reduction (incl. mixed dtypes and tuple-bearing trees)."""
+    base = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": (jnp.zeros((5,), jnp.int32), jnp.ones((2, 2), jnp.bfloat16))}
+    switched = jax.tree.map(lambda x: x, base)
+    assert core.switching.changed_fraction(base, switched) == 0.0
+    switched = {"a": base["a"].at[0, 0].set(99.0),
+                "b": (base["b"][0].at[2].set(7), base["b"][1])}
+    got = core.switching.changed_fraction(base, switched)
+    assert got == pytest.approx(2 / (12 + 5 + 4))

@@ -1,0 +1,436 @@
+"""repro.hub: pack format v2, AdapterStore residency, ServingEngine.
+
+Acceptance bars pinned here:
+  * f32 save/load round trip is bit-exact; corrupted files are rejected.
+  * int8 packs serve within 1e-2 of their f32 source while ``nbytes()``
+    drops >= 3x.
+  * ServingEngine continuous batching reproduces the fixed-batch
+    multi-tenant engine token-for-token on the same request trace.
+  * AdapterStore eviction respects the byte budget in LRU order.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.configs import AdapterConfig, get_smoke_config
+from repro.core.adapters import AdapterPack
+from repro.hub import (AdapterStore, PackFormatError, ServingEngine,
+                       load_pack, peek_pack, save_pack)
+from repro.hub.packio import QuantPack
+from repro.models import layers, lm
+
+TARGETS = ("wq", "wk", "wv", "wo", "w_up", "w_gate", "w_down")
+
+
+def synth_pack(name="t0", seed=0, k=40, scale=0.05, lead=(3,), nm=(64, 48)):
+    """A hand-built pack with stacked (lead) dims, no model needed."""
+    rng = np.random.default_rng(seed)
+    n, m = nm
+    nl = int(np.prod(lead)) if lead else 1
+    idx = np.stack([rng.choice(n * m, k, replace=False)
+                    for _ in range(nl)]).astype(np.int32)
+    val = (scale * rng.standard_normal((nl, k))).astype(np.float32)
+    entries = {
+        "stages/0/attn/wq": (jnp.asarray(idx.reshape(lead + (k,))),
+                             jnp.asarray(val.reshape(lead + (k,)))),
+        "embed/emb": (jnp.asarray(idx[:1].reshape(k)),
+                      jnp.asarray(val[:1].reshape(k))),
+    }
+    return AdapterPack(name=name, entries=entries, alpha=0.75)
+
+
+def dense_of(pack, path, size=64 * 48):
+    idx, val = pack.entries[path]
+    idxf = np.asarray(idx).reshape(-1, np.asarray(idx).shape[-1])
+    valf = np.asarray(val, np.float64).reshape(idxf.shape)
+    out = np.zeros((idxf.shape[0], size))
+    for r in range(idxf.shape[0]):
+        np.add.at(out[r], idxf[r], valf[r])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pack format v2
+# ---------------------------------------------------------------------------
+
+def test_pack_f32_roundtrip_bit_exact(tmp_path):
+    p = synth_pack()
+    f = save_pack(p, str(tmp_path / "t0.shpk"), values="f32")
+    p2 = load_pack(f)
+    assert p2.name == p.name and p2.alpha == p.alpha
+    assert sorted(p2.entries) == sorted(p.entries)
+    for path in p.entries:
+        np.testing.assert_array_equal(np.asarray(p.entries[path][0]),
+                                      np.asarray(p2.entries[path][0]))
+        np.testing.assert_array_equal(
+            np.asarray(p.entries[path][1]).view(np.uint32),
+            np.asarray(p2.entries[path][1]).view(np.uint32))
+
+
+def test_pack_bf16_roundtrip_tolerance(tmp_path):
+    p = synth_pack()
+    f = save_pack(p, str(tmp_path / "t0.shpk"), values="bf16")
+    p2 = load_pack(f)
+    for path in p.entries:
+        np.testing.assert_array_equal(np.asarray(p.entries[path][0]),
+                                      np.asarray(p2.entries[path][0]))
+        np.testing.assert_allclose(np.asarray(p.entries[path][1]),
+                                   np.asarray(p2.entries[path][1]),
+                                   rtol=1e-2, atol=1e-3)
+
+
+def test_pack_int8_roundtrip_tolerance_and_compression(tmp_path):
+    p = synth_pack(k=120)
+    f = save_pack(p, str(tmp_path / "t0.shpk"), values="int8")
+    q = load_pack(f, dequantize=False)
+    assert isinstance(q, QuantPack)
+    # the acceptance bar: the resident quantized form is >= 3x smaller
+    assert p.nbytes() / q.nbytes() >= 3.0
+    dq = q.dequantize()
+    assert dq.alpha == p.alpha
+    for path in p.entries:
+        # (idx, val) pairs are re-sorted on save: compare as dense deltas
+        want, got = dense_of(p, path), dense_of(dq, path)
+        # symmetric per-path quantization: error bounded by scale/2
+        bound = np.max(np.abs(np.asarray(p.entries[path][1]))) / 127.0
+        assert np.max(np.abs(want - got)) <= bound
+    # dequantize=True yields an AdapterPack directly
+    assert isinstance(load_pack(f), AdapterPack)
+
+
+def test_pack_int8_handles_duplicate_padding_indices(tmp_path):
+    # fuse_packs pads rows with (idx 0, val 0) duplicates; delta coding
+    # must survive gap-0 runs
+    idx = jnp.asarray([[0, 0, 0, 5, 900]], jnp.int32)
+    val = jnp.asarray([[0.0, 0.0, 0.1, -0.2, 0.3]], jnp.float32)
+    p = AdapterPack("dup", {"embed/emb": (idx, val)})
+    f = save_pack(p, str(tmp_path / "dup.shpk"), values="int8")
+    dq = load_pack(f)
+    want = dense_of(p, "embed/emb", 1000)
+    got = dense_of(dq, "embed/emb", 1000)
+    np.testing.assert_allclose(want, got, atol=0.3 / 127 + 1e-9)
+
+
+def test_pack_corrupted_checksum_rejected(tmp_path):
+    p = synth_pack()
+    f = save_pack(p, str(tmp_path / "t0.shpk"), values="int8")
+    raw = bytearray(open(f, "rb").read())
+    raw[-1] ^= 0xFF
+    bad = tmp_path / "bad.shpk"
+    bad.write_bytes(bytes(raw))
+    with pytest.raises(PackFormatError, match="checksum"):
+        load_pack(str(bad))
+    # truncation is caught before the checksum
+    (tmp_path / "trunc.shpk").write_bytes(bytes(raw[:-10]))
+    with pytest.raises(PackFormatError, match="truncated"):
+        load_pack(str(tmp_path / "trunc.shpk"))
+    (tmp_path / "junk.shpk").write_bytes(b"not a pack at all......")
+    with pytest.raises(PackFormatError, match="magic"):
+        load_pack(str(tmp_path / "junk.shpk"))
+    # truncation INSIDE the header region must also raise PackFormatError,
+    # not struct/json errors
+    good = bytes(open(f, "rb").read())
+    for cut in (10, 30):
+        (tmp_path / "hdr.shpk").write_bytes(good[:cut])
+        with pytest.raises(PackFormatError):
+            load_pack(str(tmp_path / "hdr.shpk"))
+
+
+def test_peek_reads_header_only(tmp_path):
+    p = synth_pack(name="peeked")
+    f = save_pack(p, str(tmp_path / "p.shpk"), values="int8")
+    h = peek_pack(f)
+    assert h["name"] == "peeked" and h["values"] == "int8"
+    assert "entries" in h
+
+
+# ---------------------------------------------------------------------------
+# AdapterStore
+# ---------------------------------------------------------------------------
+
+def test_store_lazy_load_and_lru_eviction(tmp_path):
+    store_root = str(tmp_path / "store")
+    packs = [synth_pack(name=f"a{i}", seed=i) for i in range(4)]
+    one = load_pack(save_pack(packs[0], str(tmp_path / "probe.shpk"),
+                              values="int8"), dequantize=False).nbytes()
+    store = AdapterStore(store_root, budget_bytes=2 * one + one // 2)
+    for p in packs:
+        store.add(p, values="int8")
+    assert store.names() == ["a0", "a1", "a2", "a3"]
+    assert store.resident_bytes() == 0          # add() does not load
+
+    store.get("a0")
+    store.get("a1")
+    assert store.loads == 2
+    assert store.resident_names() == ["a0", "a1"]
+    # budget fits 2 residents: loading a2 evicts the LRU (a0)
+    store.get("a2")
+    assert store.resident_names() == ["a1", "a2"]
+    assert store.evictions == 1
+    assert store.resident_bytes() <= store.budget_bytes
+    # touching a1 then loading a3 evicts a2, not a1
+    store.get("a1")
+    store.get("a3")
+    assert store.resident_names() == ["a1", "a3"]
+    # evicted adapters reload transparently from disk
+    p0 = store.get("a0")
+    assert p0.name == "a0" and store.loads == 5
+
+
+def test_store_get_matches_source_pack(tmp_path):
+    p = synth_pack(name="exact")
+    store = AdapterStore(str(tmp_path), budget_bytes=None)
+    store.add(p, values="f32")
+    got = store.get("exact")
+    for path in p.entries:
+        np.testing.assert_array_equal(np.asarray(p.entries[path][1]),
+                                      np.asarray(got.entries[path][1]))
+
+
+def test_store_unknown_and_memory_only(tmp_path):
+    store = AdapterStore(root=None)
+    p = synth_pack(name="mem")
+    store.add(p)
+    assert store.get("mem") is p                # memory-only: same handle
+    with pytest.raises(KeyError, match="nope"):
+        store.get("nope")
+
+
+def test_store_memory_only_int8_stays_quantized(tmp_path):
+    """values='int8' with no root must quantize in memory, not silently
+    keep the f32 object resident."""
+    p = synth_pack(name="q", k=120)
+    store = AdapterStore(root=None)
+    store.add(p, values="int8")
+    assert store.resident_bytes() <= p.nbytes() / 3
+    got = store.get("q")
+    bound = max(np.max(np.abs(np.asarray(v))) for _, v in p.entries.values())
+    for path in p.entries:
+        assert np.max(np.abs(dense_of(p, path) - dense_of(got, path))) \
+            <= bound / 127.0
+    with pytest.raises(ValueError, match="bf16"):
+        store.add(synth_pack(name="b"), values="bf16")
+
+
+def test_store_register_file(tmp_path):
+    p = synth_pack(name="reg")
+    f = save_pack(p, str(tmp_path / "elsewhere.shpk"), values="int8")
+    store = AdapterStore(str(tmp_path / "root"))
+    name = store.register_file(f)
+    assert name == "reg" and store.resident_bytes() == 0
+    assert store.get("reg").num_params() == p.num_params()
+
+
+# ---------------------------------------------------------------------------
+# ServingEngine — continuous batching
+# ---------------------------------------------------------------------------
+
+def make_model_packs(cfg, params, n, seed=7, scale=0.05):
+    acfg = AdapterConfig(kind="shira", mask="rand", sparsity=0.98,
+                         target_modules=TARGETS)
+    packs = []
+    for i in range(n):
+        sub = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        values, aux = core.init_adapter(sub, params, acfg)
+        values = jax.tree.map(
+            lambda v: None if v is None
+            else scale * jax.random.normal(sub, v.shape), values,
+            is_leaf=lambda x: x is None)
+        packs.append(core.pack_from_shira(f"a{i}", values, aux))
+    return packs
+
+
+@pytest.fixture(scope="module")
+def serving_setup():
+    with layers.compute_precision(jnp.float32):
+        cfg = get_smoke_config("starcoder2-7b")
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        packs = make_model_packs(cfg, params, 3)
+        yield cfg, params, packs
+
+
+def test_continuous_batching_matches_fixed_batch(serving_setup):
+    """The acceptance parity bar: the ServingEngine must reproduce the
+    fixed-batch multi-tenant outputs token-for-token on the same trace —
+    with fewer lanes than requests, mixed request lengths, and an adapter
+    stack in the mix."""
+    from repro.serving import MultiTenantEngine
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = serving_setup
+        B, S = 5, 8
+        lens = [4, 2, 4, 3, 1]
+        names = ["a0", "a2", None, ("a0", "a1"), "a0"]
+        toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (B, S),
+                                             0, cfg.vocab_size))
+        mt = MultiTenantEngine(cfg, params)
+        for p in packs:
+            mt.register(p)
+        want, _ = mt.generate({"tokens": jnp.asarray(toks)}, names,
+                              max(lens))
+        want = np.asarray(want)
+
+        se = ServingEngine(cfg, params, slots=2, cache_size=S + max(lens) + 8)
+        for p in packs:
+            se.register(p)
+        futs = [se.submit(toks[i], names[i], max_tokens=lens[i])
+                for i in range(B)]
+        se.run()
+        for i, f in enumerate(futs):
+            assert f.done()
+            np.testing.assert_array_equal(f.result(), want[i][:lens[i]],
+                                          err_msg=f"request {i}")
+        # every request decoded exactly its own length: no drain barrier
+        assert se.tokens_out == sum(lens)
+
+
+def test_continuous_batching_mamba_arch():
+    """The admission cache-splice recovers the batch axis per leaf — ssm
+    stacks put it behind the scan dims, unlike KV caches."""
+    from repro.serving import MultiTenantEngine
+    with layers.compute_precision(jnp.float32):
+        cfg = get_smoke_config("mamba2-780m")
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        packs = make_model_packs(cfg, params, 2)
+        mt = MultiTenantEngine(cfg, params)
+        for p in packs:
+            mt.register(p)
+        B, S, T = 4, 8, 3
+        toks = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (B, S),
+                                             0, cfg.vocab_size))
+        want = np.asarray(mt.generate({"tokens": jnp.asarray(toks)},
+                                      ["a0", "a1", None, "a0"], T)[0])
+        se = ServingEngine(cfg, params, slots=2, cache_size=S + T + 8)
+        for p in packs:
+            se.register(p)
+        futs = [se.submit(toks[i], n, max_tokens=T)
+                for i, n in enumerate(["a0", "a1", None, "a0"])]
+        se.run()
+        for i, f in enumerate(futs):
+            np.testing.assert_array_equal(f.result(), want[i])
+
+
+def test_serving_engine_eos_recycles_slot(serving_setup):
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = serving_setup
+        se = ServingEngine(cfg, params, slots=1, cache_size=32)
+        se.register(packs[0])
+        toks = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (8,),
+                                             0, cfg.vocab_size))
+        # discover the greedy continuation, then replay with its second
+        # token as EOS: the request must stop early and free the lane
+        probe = se.submit(toks, "a0", max_tokens=4)
+        se.run()
+        full = probe.result()
+        se2 = ServingEngine(cfg, params, slots=1, cache_size=32)
+        se2.register(packs[0])
+        f1 = se2.submit(toks, "a0", max_tokens=4, eos_id=int(full[1]))
+        f2 = se2.submit(toks, "a0", max_tokens=2)
+        se2.run()
+        assert len(f1.result()) == 2 and int(f1.result()[1]) == int(full[1])
+        assert len(f2.result()) == 2
+        np.testing.assert_array_equal(f2.result(), full[:2])
+
+
+def test_serving_engine_validation(serving_setup):
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = serving_setup
+        se = ServingEngine(cfg, params, slots=2, cache_size=16)
+        se.register(packs[0])
+        with pytest.raises(KeyError, match="unregistered"):
+            se.submit(np.zeros(4, np.int32), "nope", max_tokens=2)
+        with pytest.raises(ValueError, match="cache slots"):
+            se.submit(np.zeros(12, np.int32), "a0", max_tokens=8)
+        fut = se.submit(np.zeros(4, np.int32), "a0", max_tokens=2)
+        with pytest.raises(RuntimeError, match="in flight"):
+            fut.result()
+
+
+def test_int8_pack_serves_within_tolerance(tmp_path, serving_setup):
+    """Acceptance: f32 -> int8 -> load round trip serves with max logit
+    deviation < 1e-2 while the pack's resident bytes drop >= 3x."""
+    from repro.serving import MultiTenantEngine
+    from repro.serving.multitenant import greedy_decode
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = serving_setup
+        pack = packs[0]
+        f = save_pack(pack, str(tmp_path / "a0.shpk"), values="int8")
+        q = load_pack(f, dequantize=False)
+        assert pack.nbytes() / q.nbytes() >= 3.0
+        B, S, T = 2, 8, 4
+        toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                                  cfg.vocab_size)
+        logits = {}
+        for tag, pk in (("f32", pack), ("int8", q.dequantize())):
+            eng = MultiTenantEngine(cfg, params)
+            eng.register(pk)
+            ids = eng.ids_for(["a0", "a0"])
+            p = eng.wrapped_params(ids)
+            _, lg = greedy_decode(
+                cfg, {"tokens": toks}, T,
+                lambda b: eng._prefill(p, b, S + T + 8),
+                lambda t, c, pos: eng._decode(p, t, c, pos))
+            logits[tag] = np.asarray(lg, np.float32)
+        dev = float(np.max(np.abs(logits["f32"] - logits["int8"])))
+        assert dev < 1e-2, f"int8 serving deviated by {dev}"
+
+
+def test_serving_scheduler_sees_live_lanes_only(serving_setup):
+    """Idle decode lanes must not count as base traffic in the FusedLRU
+    shares: 2 live 'a0' requests on a 4-slot engine are 100% a0 traffic."""
+    from repro.core.switching import FusedLRU
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = serving_setup
+        sched = FusedLRU(promote_at=0.9, decay=0.0)
+        se = ServingEngine(cfg, params, slots=4, cache_size=24,
+                           scheduler=sched)
+        for p in packs:
+            se.register(p)
+        toks = np.asarray(jax.random.randint(jax.random.PRNGKey(5), (2, 8),
+                                             0, cfg.vocab_size))
+        futs = [se.submit(toks[i], "a0", max_tokens=3) for i in range(2)]
+        se.run()
+        assert all(f.done() for f in futs)
+        assert sched.share.get("a0", 0.0) == pytest.approx(1.0)
+        assert se.engine.fused == "a0"
+
+
+def test_stack_slots_pruned_after_ttl(serving_setup):
+    """Ad-hoc adapter-stack tenants must not grow the side tables forever:
+    a stack idle for > stack_ttl batches loses its slot (and duplicate
+    members collapse to a single adapter)."""
+    from repro.serving import MultiTenantEngine
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = serving_setup
+        eng = MultiTenantEngine(cfg, params)
+        for p in packs:
+            eng.register(p)
+        eng.stack_ttl = 3
+        eng.ids_for([("a0", "a1"), "a2"])
+        assert ("a0", "a1") in eng._slots
+        # duplicates normalize away: ("a0","a0") is the plain "a0" tenant
+        ids = eng.ids_for([("a0", "a0")])
+        assert int(ids[0]) == eng._slots["a0"]
+        for _ in range(4):
+            eng.ids_for(["a2"])
+        assert ("a0", "a1") not in eng._slots
+        assert ("a0", "a1") not in eng._stacks
+
+
+def test_serving_engine_via_store_lazy_registration(tmp_path, serving_setup):
+    """submit() resolves adapters it has never seen through the store."""
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = serving_setup
+        store = AdapterStore(str(tmp_path), budget_bytes=None)
+        for p in packs:
+            store.add(p, values="f32")
+        se = ServingEngine(cfg, params, slots=2, cache_size=24, store=store)
+        toks = np.asarray(jax.random.randint(jax.random.PRNGKey(4), (8,),
+                                             0, cfg.vocab_size))
+        fut = se.submit(toks, "a1", max_tokens=3)   # never register()ed
+        se.run()
+        assert len(fut.result()) == 3
+        assert store.loads >= 1

@@ -217,6 +217,71 @@ def test_fused_lru_policy():
     assert d.demote == "c" and s2.fused is None
 
 
+def test_fused_lru_tie_break_deterministic():
+    """Equal shares must promote the lexicographically-first adapter, not
+    whichever dict insertion order happens to yield (regression: promotion
+    used to depend on the order tenants were first observed)."""
+    for first_seen in (["b", "b", "a", "a"], ["a", "a", "b", "b"]):
+        s = FusedLRU(promote_at=0.5, demote_at=0.2, decay=0.0)
+        d = s.observe(first_seen)           # both at exactly 50%
+        assert d.promote == "a", first_seen
+        assert s.fused == "a"
+
+
+def test_fused_lru_capacity_groups():
+    """capacity=2 promotes a hot adapter *stack* as a group; capacity=1
+    never does, even when the stack dominates traffic."""
+    hot = [("a0", "a1")] * 3 + ["a2"]
+    s1 = FusedLRU(promote_at=0.5, decay=0.0, capacity=1)
+    d = s1.observe(hot)
+    assert d.promote is None and s1.fused is None
+    s2 = FusedLRU(promote_at=0.5, decay=0.0, capacity=2)
+    d = s2.observe(hot)
+    assert d.promote == ("a0", "a1") and s2.fused == ("a0", "a1")
+    # normalization: member order within a stack does not split traffic
+    s3 = FusedLRU(promote_at=0.5, decay=0.0, capacity=2)
+    d = s3.observe([("a1", "a0"), ("a0", "a1"), ("a1", "a0"), "a2"])
+    assert d.promote == ("a0", "a1")
+    # demotion restores the un-fused state
+    d = s2.observe(["a2", "a2", "a2", "a2"])
+    assert d.demote == ("a0", "a1")
+
+
+def test_group_fusion_preserves_outputs(dense_setup):
+    """Fusing a hot STACK into the shared base (capacity=2) must not change
+    any tenant's output: stack members, other adapters, and base traffic
+    are all served off group-aware diff packs."""
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = dense_setup
+        plain = MultiTenantEngine(cfg, params)
+        sched = MultiTenantEngine(
+            cfg, params,
+            scheduler=FusedLRU(promote_at=0.5, decay=0.0, capacity=2))
+        for p in packs:
+            plain.register(p)
+            sched.register(p)
+        B, S, T = 4, 8, 3
+        toks = jax.random.randint(jax.random.PRNGKey(6), (B, S), 0,
+                                  cfg.vocab_size)
+        names = [("a0", "a1"), ("a1", "a0"), "a2", None]  # stack-dominated
+        want, _ = plain.generate({"tokens": toks}, names, T)
+        got, _ = sched.generate({"tokens": toks}, names, T)
+        assert sched.fused == ("a0", "a1")
+        assert sched.fuse_transitions == 1
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+        # spread traffic -> demote; the base must return to pristine
+        names2 = ["a0", "a2", None, None]
+        want2, _ = plain.generate({"tokens": toks}, names2, T)
+        got2, _ = sched.generate({"tokens": toks}, names2, T)
+        assert sched.fused is None
+        np.testing.assert_array_equal(np.asarray(got2), np.asarray(want2))
+        for a, b in zip(jax.tree.leaves(sched.shared),
+                        jax.tree.leaves(params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+
+
 def test_unsupported_target_rejected():
     cfg = get_smoke_config("starcoder2-7b")
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
