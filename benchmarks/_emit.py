@@ -1,0 +1,99 @@
+"""Machine-readable benchmark output + the CI regression gate.
+
+Every benchmark in this directory can emit a ``BENCH_<name>.json`` file
+(``--json [PATH]``) with one shared schema, so CI can archive throughput
+trajectories and fail PRs that regress them:
+
+  {
+    "schema": 1,
+    "bench": "multi_tenant",          # stable name, keys baseline.json
+    "arch": "starcoder2-7b-smoke",
+    "metrics": {"tokens_per_s_batched": 123.4, ...},   # numbers only
+    "meta": {"smoke": true, ...}      # free-form run parameters
+  }
+
+The regression gate (``check_regression.py``) compares a run's metrics
+against ``benchmarks/baseline.json``:
+
+  {"multi_tenant": {"gate": {"tokens_per_s_batched": 40.0}}, ...}
+
+Every gated metric is HIGHER-IS-BETTER: the gate trips when
+``current < baseline * (1 - threshold)`` (threshold defaults to 25%).
+Metrics present in a run but absent from the baseline are informational
+only — so new metrics can ship before a baseline exists for them.
+
+Refreshing the baseline: run the bench with ``--smoke --json`` on a
+CI-class machine, then copy the gated metrics into baseline.json at ~60%
+of the measured value (CI runners are noisy shared VMs; the gate should
+catch real regressions, not scheduler jitter).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+SCHEMA_VERSION = 1
+
+# bench name -> metrics that may be gated in baseline.json. check_regression
+# refuses baselines that gate a metric its bench never emits (catches typos
+# in baseline refreshes at unit-test time, not in a red CI run).
+GATED_METRICS = {
+    "multi_tenant": ("tokens_per_s_batched", "tokens_per_s_sequential"),
+    "continuous_batching": ("tokens_per_s_continuous",
+                            "tokens_per_s_fixed"),
+    "rapid_switching": ("switches_per_s",),
+}
+
+
+def result(bench: str, arch: str, metrics: Dict[str, float],
+           meta: Optional[dict] = None) -> dict:
+    bad = [k for k, v in metrics.items()
+           if not isinstance(v, (int, float)) or isinstance(v, bool)]
+    if bad:
+        raise TypeError(f"non-numeric metrics {bad} in bench {bench!r}")
+    return {"schema": SCHEMA_VERSION, "bench": bench, "arch": arch,
+            "metrics": {k: float(v) for k, v in metrics.items()},
+            "meta": dict(meta or {})}
+
+
+def default_path(bench: str) -> str:
+    return f"BENCH_{bench}.json"
+
+
+def emit(res: dict, path: Optional[str] = None) -> str:
+    """Write one result dict as JSON; returns the path written."""
+    path = path or default_path(res["bench"])
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def compare(current: dict, baseline: dict,
+            threshold: float = 0.25) -> List[str]:
+    """Gate one bench result against the checked-in baseline.
+
+    Returns a list of human-readable failure strings (empty = pass)."""
+    bench = current.get("bench", "?")
+    if current.get("schema") != SCHEMA_VERSION:
+        return [f"{bench}: schema {current.get('schema')!r} != "
+                f"{SCHEMA_VERSION} (refresh the bench or this gate)"]
+    gates = baseline.get(bench, {}).get("gate", {})
+    known = GATED_METRICS.get(bench)
+    failures = []
+    for metric, base in gates.items():
+        if known is not None and metric not in known:
+            failures.append(f"{bench}: baseline gates unknown metric "
+                            f"{metric!r} (allowed: {list(known)})")
+            continue
+        cur = current.get("metrics", {}).get(metric)
+        if cur is None:
+            failures.append(f"{bench}: gated metric {metric!r} missing "
+                            "from the run")
+            continue
+        floor = base * (1.0 - threshold)
+        if cur < floor:
+            failures.append(
+                f"{bench}: {metric} regressed: {cur:.2f} < {floor:.2f} "
+                f"(baseline {base:.2f}, threshold {threshold:.0%})")
+    return failures

@@ -1,0 +1,58 @@
+"""CI regression gate: compare BENCH_*.json runs against baseline.json.
+
+  python benchmarks/check_regression.py BENCH_multi_tenant.json \
+      [BENCH_continuous_batching.json ...] \
+      --baseline benchmarks/baseline.json [--threshold 0.25]
+
+Exit code 1 (with a per-metric report) when any gated metric falls more
+than ``threshold`` below its baseline. See ``_emit.py`` for the schema and
+the baseline-refresh procedure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import _emit  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("runs", nargs="+", help="BENCH_*.json files to check")
+    ap.add_argument("--baseline", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "baseline.json"))
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed fractional drop below baseline")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = []
+    for path in args.runs:
+        with open(path) as f:
+            current = json.load(f)
+        bench = current.get("bench", path)
+        fails = _emit.compare(current, baseline, threshold=args.threshold)
+        gates = baseline.get(bench, {}).get("gate", {})
+        for metric, base in sorted(gates.items()):
+            cur = current.get("metrics", {}).get(metric)
+            status = "FAIL" if any(metric in f for f in fails) else "ok"
+            shown = "missing" if cur is None else f"{cur:.2f}"
+            print(f"[{status:>4}] {bench}.{metric}: {shown} "
+                  f"(baseline {base:.2f}, floor "
+                  f"{base * (1 - args.threshold):.2f})")
+        failures.extend(fails)
+    if failures:
+        print("\nREGRESSION GATE TRIPPED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nregression gate: all metrics within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,7 +15,10 @@ mixed ``max_tokens`` (``--mixed-lengths``), where fixed batches serialize on
 their slowest member. Parity is checked token-for-token against the
 fixed-batch engine on every request.
 
-  PYTHONPATH=src python benchmarks/continuous_batching.py --smoke
+``--json [PATH]`` writes the machine-readable result (schema in
+``_emit.py``) that CI's tier3-bench gate tracks.
+
+  PYTHONPATH=src python benchmarks/continuous_batching.py --smoke --json
 """
 from __future__ import annotations
 
@@ -26,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import _emit
 from repro.configs import get_config, get_smoke_config
 from repro.launch.serve import make_adapters
 from repro.models import layers, lm
@@ -63,8 +67,13 @@ def main() -> None:
     ap.add_argument("--adapters", type=int, default=3)
     ap.add_argument("--mixed-lengths", action="store_true", default=True)
     ap.add_argument("--int8", action="store_true",
-                    help="serve from int8-quantized store packs (parity is "
-                    "then vs the quantized adapters, still exact)")
+                    help="serve from int8-quantized store packs, with int8 "
+                    "device-side delta tables (parity is then vs the "
+                    "quantized adapters, still exact)")
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="write BENCH_continuous_batching.json (or PATH) "
+                    "with the _emit schema")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -96,9 +105,12 @@ def main() -> None:
                                            lens, args.slots)
 
         engine = ServingEngine(cfg, params, slots=args.slots, store=store,
-                               cache_size=args.prompt_len + args.tokens + 8)
+                               cache_size=args.prompt_len + args.tokens + 8,
+                               table_dtype="int8" if args.int8 else "f32")
         for p in packs:
-            engine.register(p)
+            # resolve through the store: with --int8 this is the direct
+            # QuantPack -> device-table path (no f32 round trip)
+            engine.register(p.name)
         futs = [engine.submit(toks[i], names[i], max_tokens=lens[i])
                 for i in range(R)]
         dt_cc = engine.run()
@@ -116,6 +128,23 @@ def main() -> None:
           f"steps)")
     print(f"speedup: {dt_fix/dt_cc:.2f}x   PARITY OK (token-for-token, "
           f"{R} requests)")
+
+    if args.json is not None:
+        table_bytes = engine.engine.table_nbytes()
+        res = _emit.result(
+            "continuous_batching", cfg.name,
+            metrics={
+                "tokens_per_s_continuous": n_tok / dt_cc,
+                "tokens_per_s_fixed": n_tok / dt_fix,
+                "speedup": dt_fix / dt_cc,
+                "decode_steps": engine.step_count,
+                "idle_lane_steps": engine.decode_slot_waste,
+                "adapter_table_bytes": table_bytes["total"],
+            },
+            meta={"smoke": args.smoke, "requests": R, "slots": args.slots,
+                  "tokens": n_tok, "adapters": args.adapters,
+                  "int8": bool(args.int8)})
+        print(f"wrote {_emit.emit(res, args.json or None)}")
 
 
 if __name__ == "__main__":

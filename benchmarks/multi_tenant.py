@@ -10,9 +10,19 @@ the base model) served two ways:
     request's SHiRA pack applied as a Pallas side-delta, routed by ids.
 
 Reports throughput/latency for both and checks the batched outputs match
-the sequential ones (greedy tokens AND fp32 logits within 1e-3).
+the sequential ones (greedy tokens AND fp32 logits within 1e-3). With
+``--int8`` the engine keeps its device-side delta tables quantized
+(values int8 + per-adapter scale, indices int16 where they fit) and the
+parity bar is 1e-2 — the dequant happens inside the kernel.
 
-  PYTHONPATH=src python benchmarks/multi_tenant.py --smoke
+``--capacity-sweep A1,A2,...`` additionally serves the same batch at
+growing adapter registries, reporting throughput and resident
+adapter-table bytes per point (how the engine scales with tenant count).
+
+``--json [PATH]`` writes the machine-readable result (schema in
+``_emit.py``) that CI's tier3-bench gate tracks.
+
+  PYTHONPATH=src python benchmarks/multi_tenant.py --smoke --json
 """
 from __future__ import annotations
 
@@ -23,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import _emit
 from repro import core
 from repro.configs import get_smoke_config, get_config
 from repro.launch.serve import make_adapters
@@ -81,6 +92,45 @@ def serve_batched(cfg, engine, toks, names, tokens: int):
     return np.asarray(out), np.asarray(logits, np.float32), dt
 
 
+def measure_switch_latency(params, pack, reps: int = 3) -> float:
+    """Seconds for one SwitchEngine adapter switch (load or unload — each
+    is one sparse scatter pass), best of ``reps`` load+unload cycles."""
+    engine = core.SwitchEngine(params)
+    engine.load(pack)       # compile the scatter path
+    engine.unload()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        engine.load(pack)
+        engine.unload()
+        jax.block_until_ready(jax.tree.leaves(engine.params)[0])
+        best = min(best, (time.perf_counter() - t0) / 2)
+    return best
+
+
+def capacity_sweep(cfg, params, toks, names_template, tokens, counts,
+                   table_dtype):
+    """Throughput + resident table bytes as the adapter registry grows."""
+    points = []
+    for A in counts:
+        packs = make_adapters(cfg, params, A, jax.random.PRNGKey(11),
+                              multi_tenant=True)
+        engine = MultiTenantEngine(cfg, params, table_dtype=table_dtype)
+        for p in packs:
+            engine.register(p)
+        pool = [p.name for p in packs]
+        names = [pool[i % A] for i in range(len(names_template))]
+        _, _, dt = serve_batched(cfg, engine, toks, names, tokens)
+        _, _, dt2 = serve_batched(cfg, engine, toks, names, tokens)
+        dt = min(dt, dt2)
+        n_tok = toks.shape[0] * tokens
+        points.append({"adapters": A, "tokens_per_s": n_tok / dt,
+                       "table_bytes": engine.table_nbytes()["total"]})
+        print(f"  capacity A={A:4d}: {n_tok/dt:8.1f} tok/s  "
+              f"{points[-1]['table_bytes']:10d} table bytes")
+    return points
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="starcoder2-7b")
@@ -90,6 +140,13 @@ def main() -> None:
     ap.add_argument("--tokens", type=int, default=8)
     ap.add_argument("--adapters", type=int, default=3)
     ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--int8", action="store_true",
+                    help="int8 device-side delta tables (dequant in-kernel)")
+    ap.add_argument("--capacity-sweep", default=None, metavar="A1,A2,...",
+                    help="also sweep adapter-registry sizes (batched path)")
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH", help="write BENCH_multi_tenant.json "
+                    "(or PATH) with the _emit schema")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -97,6 +154,7 @@ def main() -> None:
         raise SystemExit("need --adapters >= 3 and --batch >= --adapters "
                          "(the parity check wants >=3 distinct adapters "
                          "in one batch)")
+    table_dtype = "int8" if args.int8 else "f32"
 
     # fp32 compute: the two paths evaluate the adapter delta in different
     # orders, and the parity check below needs a meaningful tolerance.
@@ -104,15 +162,21 @@ def main() -> None:
         params = lm.init_params(cfg, jax.random.PRNGKey(0))
         packs = make_adapters(cfg, params, args.adapters,
                               jax.random.PRNGKey(7), multi_tenant=True)
-        # all packs go through the on-disk store (format v2, f32 round trips
-        # bit-exactly so the parity bars are unaffected)
+        # all packs go through the on-disk store (format v2; f32 round
+        # trips bit-exactly, int8 serves the store's quantized tables
+        # directly so both paths see the same adapter values)
         import tempfile
 
         from repro.hub import AdapterStore
         store = AdapterStore(tempfile.mkdtemp(prefix="mt-bench-store-"))
         for p in packs:
-            store.add(p)
-        engine = MultiTenantEngine(cfg, params, store=store)
+            store.add(p, values=table_dtype if args.int8 else "f32")
+        if args.int8:
+            # the sequential baseline must serve the SAME (quantized)
+            # adapter values for the parity bars to mean anything
+            packs = [store.get(p.name) for p in packs]
+        engine = MultiTenantEngine(cfg, params, store=store,
+                                   table_dtype=table_dtype)
         for p in packs:
             engine.register(p.name)
 
@@ -135,22 +199,52 @@ def main() -> None:
                                               args.tokens)
             t_seq = dt_s if t_seq is None else min(t_seq, dt_s)
             t_bat = dt_b if t_bat is None else min(t_bat, dt_b)
+        switch_s = measure_switch_latency(params, packs[0])
+        table_bytes = engine.table_nbytes()
+
+        sweep = None
+        if args.capacity_sweep:
+            counts = [int(a) for a in args.capacity_sweep.split(",")]
+            print("capacity sweep (batched path):")
+            sweep = capacity_sweep(cfg, params, toks, names, args.tokens,
+                                   counts, table_dtype)
 
     err = float(np.max(np.abs(lg_s - lg_b)))
     tok_match = bool(np.array_equal(out_s, out_b))
     n_tok = B * args.tokens
     n_switch = len({n for n in names if n is not None})
     print(f"arch={cfg.name} B={B} adapters={args.adapters} "
-          f"tokens={args.tokens} distinct_in_batch={n_switch}")
+          f"tokens={args.tokens} distinct_in_batch={n_switch} "
+          f"tables={table_dtype}")
     print(f"sequential-switch: {t_seq*1e3:8.1f}ms  {n_tok/t_seq:8.1f} tok/s "
           f"({n_switch} switches/batch)")
     print(f"per-request batch: {t_bat*1e3:8.1f}ms  {n_tok/t_bat:8.1f} tok/s "
           f"(0 switches)")
+    print(f"switch latency: {switch_s*1e3:.2f}ms   adapter tables: "
+          f"{table_bytes['total']} bytes ({table_bytes['vals']} vals)")
     print(f"speedup: {t_seq/t_bat:.2f}x   max|logit diff|={err:.2e}   "
           f"greedy tokens equal: {tok_match}")
-    assert err < 1e-3, f"batched vs sequential logits diverged: {err}"
+    tol = 1e-2 if args.int8 else 1e-3
+    assert err < tol, f"batched vs sequential logits diverged: {err}"
     assert tok_match, "greedy tokens diverged"
-    print("PARITY OK (<1e-3)")
+    print(f"PARITY OK (<{tol:g})")
+
+    if args.json is not None:
+        res = _emit.result(
+            "multi_tenant", cfg.name,
+            metrics={
+                "tokens_per_s_batched": n_tok / t_bat,
+                "tokens_per_s_sequential": n_tok / t_seq,
+                "speedup": t_seq / t_bat,
+                "switch_latency_ms": switch_s * 1e3,
+                "adapter_table_bytes": table_bytes["total"],
+                "adapter_table_vals_bytes": table_bytes["vals"],
+                "max_logit_diff": err,
+            },
+            meta={"smoke": args.smoke, "batch": B, "tokens": args.tokens,
+                  "adapters": args.adapters, "table_dtype": table_dtype,
+                  "capacity_sweep": sweep})
+        print(f"wrote {_emit.emit(res, args.json or None)}")
 
 
 if __name__ == "__main__":

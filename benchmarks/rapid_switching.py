@@ -14,6 +14,7 @@ TPU clock).
 """
 from __future__ import annotations
 
+import argparse
 import os
 import tempfile
 import time
@@ -22,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import _emit
 from repro.core import masks as M
 from repro.core.adapters import AdapterPack
 from repro.hub import load_pack, save_pack
@@ -40,6 +42,12 @@ def timed(fn, *args, reps=5):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH", help="write BENCH_rapid_switching.json "
+                    "(or PATH) with the _emit schema")
+    args = ap.parse_args()
+    rows = []
     print("dim,shira_scatter_ms,lora_fuse_ms,speedup,"
           "shira_bytes_mb,lora_bytes_mb,lora_gemm_gflop,"
           "pack_load_f32_ms,pack_load_int8_ms,int8_shrink")
@@ -80,6 +88,25 @@ def main() -> None:
               f"{shira_mb:.2f},{lora_mb:.2f},{gemm_gflop:.2f},"
               f"{t_io['f32']:.2f},{t_io['int8']:.2f},"
               f"{pack.nbytes() / q.nbytes():.1f}x")
+        rows.append({"dim": dim, "shira_scatter_ms": t_s,
+                     "lora_fuse_ms": t_f,
+                     "pack_load_f32_ms": t_io["f32"],
+                     "pack_load_int8_ms": t_io["int8"],
+                     "int8_shrink": pack.nbytes() / q.nbytes()})
+
+    if args.json is not None:
+        top = rows[-1]            # the largest dim anchors the gate
+        res = _emit.result(
+            "rapid_switching", f"dense-{top['dim']}",
+            metrics={
+                "switches_per_s": 1e3 / top["shira_scatter_ms"],
+                "switch_latency_ms": top["shira_scatter_ms"],
+                "lora_fuse_ms": top["lora_fuse_ms"],
+                "pack_load_int8_ms": top["pack_load_int8_ms"],
+                "int8_shrink": top["int8_shrink"],
+            },
+            meta={"sparsity": SPARSITY, "rank": RANK, "dims": rows})
+        print(f"wrote {_emit.emit(res, args.json or None)}")
 
 
 if __name__ == "__main__":

@@ -110,18 +110,31 @@ class QuantPack:
         return int(sum(e.idx_stream.size + e.vals_q.size + 4
                        for e in self.entries.values()))
 
-    def dequantize(self) -> AdapterPack:
-        entries = {}
+    def int8_tables(self) -> Dict[str, Tuple[np.ndarray, np.ndarray, float]]:
+        """Decode per-path (idx (nl, k) int64, vals_q (nl, k) int8, scale)
+        WITHOUT dequantizing values to f32 — the form
+        ``MultiTenantEngine(table_dtype="int8")`` builds its device tables
+        from, so a store-int8 adapter reaches VMEM with its original
+        quantization (one rounding, at pack time)."""
+        out = {}
         for path, e in self.entries.items():
             nl = max(int(np.prod(e.lead)), 1) if e.lead else 1
-            idx = np.empty((nl, e.k), np.int32)
+            idx = np.empty((nl, e.k), np.int64)
             off = 0
             for r, ln in enumerate(e.row_lens):
                 idx[r] = _delta_decode_row(e.idx_stream[off:off + ln], e.k)
                 off += ln
-            vals = e.vals_q.astype(np.float32) * e.scale
-            entries[path] = (jnp.asarray(idx.reshape(e.lead + (e.k,))),
-                             jnp.asarray(vals.reshape(e.lead + (e.k,))))
+            out[path] = (idx, e.vals_q, e.scale)
+        return out
+
+    def dequantize(self) -> AdapterPack:
+        entries = {}
+        for path, (idx, vq, scale) in self.int8_tables().items():
+            e = self.entries[path]
+            vals = vq.astype(np.float32) * scale
+            entries[path] = (
+                jnp.asarray(idx.astype(np.int32).reshape(e.lead + (e.k,))),
+                jnp.asarray(vals.reshape(e.lead + (e.k,))))
         return AdapterPack(name=self.name, entries=entries, alpha=self.alpha)
 
 

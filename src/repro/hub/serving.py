@@ -92,7 +92,9 @@ class ServingEngine:
     """Continuous-batching front end over the multi-tenant side-delta path."""
 
     def __init__(self, cfg, params, *, slots: int = 4, cache_size: int = 128,
-                 scheduler: Optional[FusedLRU] = None, store=None):
+                 scheduler: Optional[FusedLRU] = None, store=None,
+                 table_dtype: str = "f32",
+                 interpret: Optional[bool] = None):
         if cfg.encoder_only:
             raise ValueError("encoder-only archs have no decode serving path")
         self.cfg = cfg
@@ -101,7 +103,8 @@ class ServingEngine:
         # size differs"; cache_size == slots would make it ambiguous
         self.cache_size = cache_size + 1 if cache_size == slots else cache_size
         self.engine = MultiTenantEngine(cfg, params, scheduler=scheduler,
-                                        store=store)
+                                        store=store, table_dtype=table_dtype,
+                                        interpret=interpret)
         self.caches = lm.init_cache(cfg, slots, self.cache_size)
         self._active: List[Optional[_Pending]] = [None] * slots
         self._pos = np.zeros((slots,), np.int32)      # next cache write index

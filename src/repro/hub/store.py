@@ -96,6 +96,15 @@ class AdapterStore:
     def get(self, name: str) -> AdapterPack:
         """Immutable pack handle; loads from disk (and evicts LRU residents
         past the byte budget) on a miss."""
+        form = self.get_raw(name)
+        return form.dequantize() if isinstance(form, QuantPack) else form
+
+    def get_raw(self, name: str) -> Union[AdapterPack, QuantPack]:
+        """The resident form as stored: an int8 pack comes back as its
+        ``QuantPack`` (no f32 dequant round trip) — what
+        ``MultiTenantEngine(table_dtype="int8")`` builds device tables
+        from; f32/bf16 packs come back as plain ``AdapterPack``s. Same
+        residency/LRU accounting as ``get``."""
         if name not in self._paths:
             raise KeyError(f"unknown adapter {name!r}; registered: "
                            f"{self.names()}")
@@ -108,7 +117,7 @@ class AdapterStore:
             self._admit(name, form)
         else:
             self._resident.move_to_end(name)
-        return form.dequantize() if isinstance(form, QuantPack) else form
+        return form
 
     # ------------------------------------------------------------------
     # Residency accounting

@@ -92,11 +92,27 @@ def sidedelta_table(flat_idx: np.ndarray, vals: np.ndarray, m: int, pad_to: int
     return rows, cols, vbuf
 
 
-@functools.partial(jax.jit, static_argnames=("m", "interpret"))
-def sidedelta(x, rows, cols, vals, ids, *, m, interpret=False):
+def quantize_table(vals: np.ndarray) -> Tuple[np.ndarray, float]:
+    """Symmetric int8 quantization of one adapter's (K,) value table.
+    Returns (q int8, scale) with q * scale ~= vals; scale 1.0 for an
+    all-zero table so padded slots dequantize to exact zeros."""
+    vals = np.asarray(vals, np.float32)
+    amax = float(np.max(np.abs(vals))) if vals.size else 0.0
+    scale = amax / 127.0 if amax > 0 else 1.0
+    q = np.clip(np.rint(vals / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "interpret", "bm", "kc"))
+def sidedelta(x, rows, cols, vals, ids, *, m, scale=None, interpret=False,
+              bm=None, kc=None):
     """Batched per-request sparse delta: (B, S, m) f32 with
-    delta[b] = x[b] @ dW_{ids[b]} (ids[b] < 0 -> zeros)."""
-    return sidedelta_rows(x, rows, cols, vals, ids, m, interpret=interpret)
+    delta[b] = x[b] @ dW_{ids[b]} (ids[b] < 0 -> zeros). ``vals`` may be
+    int8 with per-adapter ``scale`` (dequantised inside the kernel);
+    ``bm``/``kc`` override the VMEM tile plan."""
+    return sidedelta_rows(x, rows, cols, vals, ids, m, scale=scale,
+                          interpret=interpret, bm=bm, kc=kc)
 
 
 # ---------------------------------------------------------------------------

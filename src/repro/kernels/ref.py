@@ -33,6 +33,17 @@ def sidedelta_ref(x: jax.Array, rows: jax.Array, cols: jax.Array,
     return jnp.where((ids >= 0)[:, None, None], delta, 0.0)
 
 
+def sidedelta_int8_ref(x: jax.Array, rows: jax.Array, cols: jax.Array,
+                       vals_q: jax.Array, scale: jax.Array, ids: jax.Array,
+                       m: int) -> jax.Array:
+    """int8-table oracle: vals_q (A, K) int8 with per-adapter scale (A,)
+    f32 dequantized exactly as the kernel does (q * scale in f32) before
+    the dense reference contraction."""
+    vals = vals_q.astype(jnp.float32) * scale[:, None].astype(jnp.float32)
+    return sidedelta_ref(x, rows.astype(jnp.int32), cols.astype(jnp.int32),
+                         vals, ids, m)
+
+
 def masked_update_ref(w: jax.Array, mask: jax.Array, vals: jax.Array,
                       alpha: float = 1.0) -> jax.Array:
     out = w.astype(jnp.float32) + alpha * mask.astype(jnp.float32) \

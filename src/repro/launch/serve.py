@@ -84,7 +84,8 @@ def serve_multi_tenant(cfg, params, packs, args) -> None:
     from repro.core.switching import FusedLRU
     from repro.serving.multitenant import MultiTenantEngine
 
-    engine = MultiTenantEngine(cfg, params, scheduler=FusedLRU())
+    engine = MultiTenantEngine(cfg, params, scheduler=FusedLRU(),
+                               table_dtype="int8" if args.int8 else "f32")
     for p in packs:
         engine.register(p)
     rng = default_rng(0)
@@ -122,6 +123,7 @@ def serve_continuous(cfg, params, packs, args) -> None:
     slots = args.slots or args.batch
     engine = ServingEngine(
         cfg, params, slots=slots, store=store,
+        table_dtype="int8" if args.int8 else "f32",
         cache_size=args.prompt_len + args.tokens + 8
         + (cfg.num_prefix_embeds if cfg.modality == "vision" else 0))
     rng = default_rng(0)
@@ -163,7 +165,8 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=0,
                     help="decode lanes (continuous; 0 = --batch)")
     ap.add_argument("--int8", action="store_true",
-                    help="int8-quantized adapter store (continuous)")
+                    help="int8 adapters: quantized store packs (continuous) "
+                    "and int8 device-side delta tables (both paths)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

@@ -68,17 +68,50 @@ def cast_compute(tree):
 # ids (see repro/serving/multitenant.py). ``pdot`` then computes the base
 # matmul once for the whole batch plus each request's sparse correction via
 # the Pallas sidedelta kernel. The bundle is a plain dict so it survives
-# jax.lax.scan slicing over stacked layer weights.
+# jax.lax.scan slicing over stacked layer weights. Tables may be quantized:
+# ``sd.vals`` int8 with a per-adapter ``sd.scale`` (dequantized inside the
+# kernel's VMEM, so the resident adapter tables stay ~4x smaller).
 
 SIDEDELTA_KEY = "sd.base"
 
+# Which execution mode the sidedelta kernel uses, read at TRACE time (same
+# discipline as compute_precision): None = auto (Pallas interpret emulation
+# off-TPU, compiled Mosaic on TPU); True/False force it. interpret=False
+# off-TPU compiles the kernel's tile plan through XLA — what CPU CI uses to
+# guard the tiling/masking logic against TPU-only lowering bugs.
+SIDEDELTA_INTERPRET: Optional[bool] = None
+
+
+def sidedelta_interpret() -> bool:
+    if SIDEDELTA_INTERPRET is None:
+        return jax.default_backend() != "tpu"
+    return SIDEDELTA_INTERPRET
+
+
+@contextlib.contextmanager
+def sidedelta_backend(interpret: Optional[bool]):
+    """Temporarily force the sidedelta kernel mode. Jitted closures must be
+    *traced* inside the scope — the flag is read at trace time."""
+    global SIDEDELTA_INTERPRET
+    prev = SIDEDELTA_INTERPRET
+    SIDEDELTA_INTERPRET = interpret
+    try:
+        yield
+    finally:
+        SIDEDELTA_INTERPRET = prev
+
 
 def sidedelta_weight(base: jax.Array, rows: jax.Array, cols: jax.Array,
-                     vals: jax.Array, ids: jax.Array) -> dict:
-    """base: (n, m); rows/cols/vals: (A, K) packed per-adapter deltas;
+                     vals: jax.Array, ids: jax.Array,
+                     scale: Optional[jax.Array] = None) -> dict:
+    """base: (n, m); rows/cols/vals: (A, K) packed per-adapter deltas
+    (vals f32, or int8 with per-adapter ``scale`` (A,) f32);
     ids: (B,) int32 per-request adapter slot (-1 = base only)."""
-    return {SIDEDELTA_KEY: base, "sd.rows": rows, "sd.cols": cols,
-            "sd.vals": vals, "sd.ids": ids}
+    w = {SIDEDELTA_KEY: base, "sd.rows": rows, "sd.cols": cols,
+         "sd.vals": vals, "sd.ids": ids}
+    if scale is not None:
+        w["sd.scale"] = scale
+    return w
 
 
 def is_sidedelta(w) -> bool:
@@ -122,7 +155,8 @@ def _pdot_sidedelta(x: jax.Array, w: dict) -> jax.Array:
     y = pdot(x, base)
     delta = sidedelta(x, w["sd.rows"], w["sd.cols"], w["sd.vals"],
                       w["sd.ids"], m=base.shape[-1],
-                      interpret=jax.default_backend() != "tpu")
+                      scale=w.get("sd.scale"),
+                      interpret=sidedelta_interpret())
     return (y.astype(jnp.float32) + delta).astype(y.dtype)
 
 

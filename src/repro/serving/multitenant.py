@@ -24,6 +24,13 @@ the side term entirely. The other tenants are then served with diff packs
 -model requests with the negated fused pack. Demotion scatters the delta
 back out and restores plain packs.
 
+Device tables may be quantized (``table_dtype="int8"``): values stay int8
+with a per-adapter scale (dequantized inside the kernel's VMEM) and the
+index halves drop to int16 where the weight dims fit, so resident adapter
+HBM shrinks ~4x (values) / ~2.4x (total). Packs registered from an int8
+``AdapterStore`` reach the tables in their original quantization — no f32
+round trip, no second rounding.
+
 Tenants need not be single adapters: a request may name an adapter *stack*
 (tuple of names) whose deltas are merged into one side pack, and a
 ``FusedLRU(capacity>1)`` promotes a hot stack into the base as a group —
@@ -149,37 +156,65 @@ class MultiTenantEngine:
     accepts a registered adapter id instead of a pack object."""
 
     def __init__(self, cfg, params, *, scheduler: Optional[FusedLRU] = None,
-                 store=None):
+                 store=None, table_dtype: str = "f32",
+                 interpret: Optional[bool] = None):
+        if table_dtype not in ("f32", "int8"):
+            raise ValueError(f"table_dtype must be 'f32' or 'int8', got "
+                             f"{table_dtype!r}")
         self.cfg = cfg
         self.shared = params                 # base (+ the fused packs, if any)
         self.packs: Dict[str, AdapterPack] = {}
         self.scheduler = scheduler
         self.store = store
+        self.table_dtype = table_dtype       # device-table value dtype
+        self.interpret = interpret           # sidedelta mode (None = auto)
         self.fused: Optional[Tenant] = None
         self.fuse_transitions = 0            # promote/demote scatter count
         self._shapes = _leaf_shapes(params)
-        self._tables: Dict[str, dict] = {}   # path -> rows/cols/vals arrays
+        self._tables: Dict[str, dict] = {}   # path -> rows/cols/vals[/scale]
+        self._qpacks: Dict[str, Any] = {}    # name -> QuantPack (int8 tables)
+        self._qtables: Dict[str, dict] = {}  # name -> decoded int8_tables()
         self._slots: Dict[Any, int] = {}     # tenant -> table slot
         self._stacks: Dict[Any, int] = {}    # multi-adapter tenant -> last use
         self._batch_no = 0                   # ids_for calls (stack recency)
         self.stack_ttl = 64                  # drop stacks idle this many calls
         self._dirty = False
-        self._prefill = jax.jit(
-            lambda p, b, cs: lm.prefill(p, self.cfg, b, cs),
-            static_argnums=2)
-        self._decode = jax.jit(
-            lambda p, t, c, pos: lm.decode_step(p, self.cfg, t, c, pos))
+
+        # the sidedelta mode is read at trace time (layers.sidedelta_backend)
+        # — scope the traces so an engine-level override actually lands
+        from repro.models import layers as L
+
+        def _prefill(p, b, cs):
+            with L.sidedelta_backend(interpret):
+                return lm.prefill(p, self.cfg, b, cs)
+
+        def _decode(p, t, c, pos):
+            with L.sidedelta_backend(interpret):
+                return lm.decode_step(p, self.cfg, t, c, pos)
+
+        self._prefill = jax.jit(_prefill, static_argnums=2)
+        self._decode = jax.jit(_decode)
 
     # ------------------------------------------------------------------
     # Registration / side-delta tables
     # ------------------------------------------------------------------
 
     def register(self, pack) -> None:
+        from repro.hub.packio import QuantPack  # deferred: hub imports us
+        qp = None
         if isinstance(pack, str):
             if self.store is None:
                 raise ValueError(f"adapter named by id {pack!r} but no "
                                  "AdapterStore attached")
-            pack = self.store.get(pack)
+            if self.table_dtype == "int8" and hasattr(self.store, "get_raw"):
+                # int8 tables can be built straight from the store's
+                # quantized resident form — no f32 round trip, no second
+                # quantization error
+                pack = self.store.get_raw(pack)
+            else:
+                pack = self.store.get(pack)
+        if isinstance(pack, QuantPack):
+            qp, pack = pack, pack.dequantize()
         for path in pack.entries:
             leaf = path.rsplit("/", 1)[-1]
             if leaf in UNSUPPORTED_LEAVES:
@@ -198,6 +233,10 @@ class MultiTenantEngine:
                     self.scheduler.fused):
                 self.scheduler.fused = None  # keep it re-promotable
         self.packs[pack.name] = pack
+        self._qpacks.pop(pack.name, None)
+        self._qtables.pop(pack.name, None)
+        if qp is not None:
+            self._qpacks[pack.name] = qp
         self._dirty = True
 
     def _tenants(self) -> set:
@@ -231,7 +270,25 @@ class MultiTenantEngine:
                 name=f"-{tenant_key(self.fused)}")
         return out
 
+    def _quant_direct(self, name, pk, path):
+        """The store's quantized values for this side pack, when they can be
+        used verbatim: a plain single-adapter tenant (no diff/merge math)
+        registered from a QuantPack. Returns (idx (nl, k) int64,
+        vq (nl, k) int8, scale float) or None."""
+        if self.table_dtype != "int8" or not isinstance(name, str):
+            return None
+        if pk is not self.packs.get(name) or name not in self._qpacks:
+            return None                      # diff/merged pack: f32 math
+        qp = self._qpacks[name]
+        if path not in qp.entries:
+            return None
+        if name not in self._qtables:    # decode the gap streams once
+            self._qtables[name] = qp.int8_tables()
+        idx, vq, scale = self._qtables[name][path]
+        return idx, vq, scale * qp.alpha
+
     def _rebuild(self) -> None:
+        from repro.kernels.ops import quantize_table
         side = self._side_packs()
         order = sorted(side, key=lambda t: t if isinstance(t, str)
                        else tenant_key(t))
@@ -239,6 +296,7 @@ class MultiTenantEngine:
         paths = sorted({p for pk in side.values() for p in pk.entries})
         tables: Dict[str, dict] = {}
         A = max(len(side), 1)
+        int8 = self.table_dtype == "int8"
         for path in paths:
             shape = self._shapes[path]
             *lead, n, m = shape
@@ -247,26 +305,62 @@ class MultiTenantEngine:
             for pk in side.values():
                 if path in pk.entries:
                     kmax = max(kmax, pk.entries[path][0].shape[-1])
-            rows = np.zeros((nl, A, kmax), np.int32)
-            cols = np.zeros((nl, A, kmax), np.int32)
-            vals = np.zeros((nl, A, kmax), np.float32)
+            # int8 tables also shrink the index halves when the dims fit
+            # int16 (the kernel widens them to int32 inside VMEM)
+            idx_dt = (np.int16 if int8 and n < 2 ** 15 and m < 2 ** 15
+                      else np.int32)
+            rows = np.zeros((nl, A, kmax), idx_dt)
+            cols = np.zeros((nl, A, kmax), idx_dt)
+            vals = np.zeros((nl, A, kmax), np.int8 if int8 else np.float32)
+            scale = np.ones((nl, A), np.float32)
             for name, pk in side.items():
                 if path not in pk.entries:
                     continue
                 s = self._slots[name]
+                direct = self._quant_direct(name, pk, path)
+                if direct is not None:       # store int8 -> table int8, 1:1
+                    idxf, vq, sc = direct
+                    idxf = np.asarray(idxf).reshape(nl, -1)
+                    k = idxf.shape[-1]
+                    rows[:, s, :k] = (idxf // m).astype(idx_dt)
+                    cols[:, s, :k] = (idxf % m).astype(idx_dt)
+                    vals[:, s, :k] = np.asarray(vq).reshape(nl, -1)
+                    scale[:, s] = sc
+                    continue
                 idx, val = pk.entries[path]
                 idxf = np.asarray(idx).reshape(nl, -1)
                 valf = np.asarray(val, np.float32).reshape(nl, -1) * pk.alpha
                 for i in range(nl):
                     r, c, v = sidedelta_table(idxf[i], valf[i], m, kmax)
-                    rows[i, s], cols[i, s], vals[i, s] = r, c, v
-            tables[path] = {
+                    rows[i, s], cols[i, s] = r.astype(idx_dt), c.astype(idx_dt)
+                    if int8:
+                        vals[i, s], scale[i, s] = quantize_table(v)
+                    else:
+                        vals[i, s] = v
+            entry = {
                 "rows": jnp.asarray(rows.reshape(tuple(lead) + (A, kmax))),
                 "cols": jnp.asarray(cols.reshape(tuple(lead) + (A, kmax))),
                 "vals": jnp.asarray(vals.reshape(tuple(lead) + (A, kmax))),
             }
+            if int8:
+                entry["scale"] = jnp.asarray(scale.reshape(tuple(lead) + (A,)))
+            tables[path] = entry
         self._tables = tables
         self._dirty = False
+
+    def table_nbytes(self) -> Dict[str, int]:
+        """Device-side adapter-table bytes by component (what multi-tenant
+        serving keeps resident in HBM). int8 tables shrink ``vals`` 4x and,
+        when the dims fit int16, ``rows``/``cols`` 2x."""
+        if self._dirty:
+            self._rebuild()
+        out = {"rows": 0, "cols": 0, "vals": 0, "scale": 0}
+        for t in self._tables.values():
+            for k in out:
+                if k in t:
+                    out[k] += int(t[k].nbytes)
+        out["total"] = sum(out.values())
+        return out
 
     # ------------------------------------------------------------------
     # Fused-state transitions (the scheduler's promote/demote)
@@ -356,7 +450,8 @@ class MultiTenantEngine:
                 lead = tree.shape[:-2]
                 return sidedelta_weight(
                     tree, t["rows"], t["cols"], t["vals"],
-                    jnp.broadcast_to(ids, lead + ids.shape))
+                    jnp.broadcast_to(ids, lead + ids.shape),
+                    scale=t.get("scale"))
             return tree
 
         return walk(self.shared, ())

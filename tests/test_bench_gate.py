@@ -1,0 +1,115 @@
+"""tier3-bench contract: the benchmark JSON schema and the regression
+gate comparator (benchmarks/_emit.py + check_regression.py).
+
+The gate itself must be tested — a comparator that never trips is a
+green light painted on a wall. ``test_gate_trips_on_doctored_baseline``
+runs the real CLI against a baseline demanding impossible throughput and
+asserts the nonzero exit.
+"""
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_DIR = os.path.join(REPO, "benchmarks")
+
+
+def _load_emit():
+    spec = importlib.util.spec_from_file_location(
+        "_emit", os.path.join(BENCH_DIR, "_emit.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+emit = _load_emit()
+
+
+def _result(**metrics):
+    return emit.result("multi_tenant", "smoke-arch", metrics,
+                       meta={"smoke": True})
+
+
+def test_schema_shape():
+    r = _result(tokens_per_s_batched=100.0)
+    assert r["schema"] == emit.SCHEMA_VERSION
+    assert r["bench"] == "multi_tenant"
+    assert r["metrics"] == {"tokens_per_s_batched": 100.0}
+    assert r["meta"]["smoke"] is True
+    with pytest.raises(TypeError):
+        emit.result("multi_tenant", "a", {"tokens_per_s_batched": "fast"})
+
+
+def test_emit_roundtrip(tmp_path):
+    p = emit.emit(_result(tokens_per_s_batched=1.5),
+                  str(tmp_path / "BENCH_x.json"))
+    assert json.load(open(p))["metrics"]["tokens_per_s_batched"] == 1.5
+
+
+def test_compare_passes_within_threshold():
+    base = {"multi_tenant": {"gate": {"tokens_per_s_batched": 100.0}}}
+    assert emit.compare(_result(tokens_per_s_batched=80.0), base) == []
+    assert emit.compare(_result(tokens_per_s_batched=75.0), base) == []
+
+
+def test_compare_trips_below_threshold():
+    base = {"multi_tenant": {"gate": {"tokens_per_s_batched": 100.0}}}
+    fails = emit.compare(_result(tokens_per_s_batched=74.9), base)
+    assert len(fails) == 1 and "regressed" in fails[0]
+    # custom threshold
+    assert emit.compare(_result(tokens_per_s_batched=74.9), base,
+                        threshold=0.5) == []
+
+
+def test_compare_flags_missing_and_unknown_metrics():
+    base = {"multi_tenant": {"gate": {"tokens_per_s_batched": 1.0}}}
+    fails = emit.compare(_result(speedup=2.0), base)
+    assert len(fails) == 1 and "missing" in fails[0]
+    bad = {"multi_tenant": {"gate": {"no_such_metric": 1.0}}}
+    fails = emit.compare(_result(tokens_per_s_batched=9.0), bad)
+    assert len(fails) == 1 and "unknown metric" in fails[0]
+    # schema drift is a failure, not a silent pass
+    stale = dict(_result(tokens_per_s_batched=9.0), schema=0)
+    assert emit.compare(stale, base)
+
+
+def test_checked_in_baseline_is_valid():
+    """baseline.json must only gate metrics its bench actually emits
+    (GATED_METRICS), with positive floors — catches baseline-refresh typos
+    here instead of in a red CI run."""
+    base = json.load(open(os.path.join(BENCH_DIR, "baseline.json")))
+    gated = {b: g["gate"] for b, g in base.items()
+             if isinstance(g, dict) and "gate" in g}
+    assert gated, "baseline.json gates nothing — the tier is decorative"
+    for bench, gates in gated.items():
+        assert bench in emit.GATED_METRICS, bench
+        for metric, floor in gates.items():
+            assert metric in emit.GATED_METRICS[bench], (bench, metric)
+            assert isinstance(floor, (int, float)) and floor > 0
+
+
+def test_gate_trips_on_doctored_baseline(tmp_path):
+    """End to end through the real CLI: a baseline demanding impossible
+    throughput must exit nonzero; the honest baseline must pass."""
+    run = tmp_path / "BENCH_multi_tenant.json"
+    emit.emit(_result(tokens_per_s_batched=500.0), str(run))
+    doctored = tmp_path / "baseline.json"
+    json.dump({"multi_tenant": {"gate": {"tokens_per_s_batched": 1e9}}},
+              open(doctored, "w"))
+    cli = os.path.join(BENCH_DIR, "check_regression.py")
+    r = subprocess.run([sys.executable, cli, str(run),
+                        "--baseline", str(doctored)],
+                       capture_output=True, text=True)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "REGRESSION GATE TRIPPED" in r.stdout
+    honest = tmp_path / "ok.json"
+    json.dump({"multi_tenant": {"gate": {"tokens_per_s_batched": 400.0}}},
+              open(honest, "w"))
+    r = subprocess.run([sys.executable, cli, str(run),
+                        "--baseline", str(honest)],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr

@@ -111,6 +111,115 @@ def test_sidedelta_base_requests_untouched():
     assert np.any(out[1] != 0)
 
 
+@pytest.mark.parametrize("B,S,n,m,A,K,bm", [
+    (3, 8, 128, 512, 3, 65, 128),     # dense MLP-ish: 4 m-tiles
+    (2, 4, 96, 384, 2, 33, 128),      # MoE expert-ish: odd n, 3 m-tiles
+    (2, 2, 160, 576, 2, 47, 256),     # MLA-ish: non-pow2 dims, ragged tile
+])
+@pytest.mark.parametrize("interpret", [True, False])
+def test_sidedelta_tiled_parity(B, S, n, m, A, K, bm, interpret):
+    """v2 tiling: multi-m-tile grids must match the oracle in BOTH the
+    Pallas interpreter and compiled mode (on CPU the latter dispatches the
+    same tile plan through XLA — the interpret=False smoke that guards the
+    tiling/masking bookkeeping)."""
+    rng = np.random.RandomState(hash((B, S, n, m, A, K)) % 2**31)
+    x = jnp.asarray(rng.randn(B, S, n), jnp.float32)
+    rows = jnp.asarray(rng.randint(0, n, (A, K)), jnp.int32)
+    cols = jnp.asarray(rng.randint(0, m, (A, K)), jnp.int32)
+    vals = jnp.asarray(rng.randn(A, K), jnp.float32)
+    ids = jnp.asarray(rng.randint(-1, A, (B,)), jnp.int32)
+    out = ops.sidedelta(x, rows, cols, vals, ids, m=m, interpret=interpret,
+                        bm=bm, kc=128)
+    want = ref.sidedelta_ref(x, rows, cols, vals, ids, m)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want, np.float32),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_sidedelta_compiled_big_dff():
+    """The acceptance shape: m=8192 with interpret=False on CPU. The VMEM
+    plan must actually m-tile (bm < m) and the compiled result must match
+    the oracle to fp32 accuracy."""
+    from repro.kernels.sidedelta import (DEFAULT_VMEM_BUDGET, plan_tiles,
+                                         vmem_estimate)
+    B, S, n, m, A, K = 2, 8, 256, 8192, 2, 1024
+    bm, kc = plan_tiles(S, n, m, K)
+    assert bm < m and m % bm == 0, (bm, m)
+    assert vmem_estimate(S, n, m, K, bm, kc) <= DEFAULT_VMEM_BUDGET
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(B, S, n), jnp.float32)
+    rows = jnp.asarray(rng.randint(0, n, (A, K)), jnp.int32)
+    cols = jnp.asarray(rng.randint(0, m, (A, K)), jnp.int32)
+    vals = jnp.asarray(rng.randn(A, K), jnp.float32)
+    ids = jnp.asarray([1, -1], jnp.int32)
+    out = ops.sidedelta(x, rows, cols, vals, ids, m=m, interpret=False)
+    want = ref.sidedelta_ref(x, rows, cols, vals, ids, m)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want, np.float32),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("interpret", [True, False])
+def test_sidedelta_tile_straddle(interpret):
+    """Nonzeros ON the m-tile boundaries (last col of tile j, first col of
+    tile j+1) and duplicate (row, col) pairs must land exactly once each —
+    the local-column one-hot masks, it must not double-count or drop."""
+    n, m, bm = 32, 256, 128
+    rows = jnp.asarray([[0, 1, 2, 2, 3]], jnp.int32)
+    cols = jnp.asarray([[127, 128, 255, 255, 0]], jnp.int32)  # edges + dup
+    vals = jnp.asarray([[1.0, 2.0, 3.0, 4.0, 5.0]], jnp.float32)
+    x = jnp.asarray(np.random.RandomState(3).randn(1, 4, n), jnp.float32)
+    ids = jnp.asarray([0], jnp.int32)
+    out = ops.sidedelta(x, rows, cols, vals, ids, m=m, interpret=interpret,
+                        bm=bm, kc=128)
+    want = ref.sidedelta_ref(x, rows, cols, vals, ids, m)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+    # the duplicate (2, 255) really accumulated 3 + 4
+    np.testing.assert_allclose(np.asarray(out)[0, :, 255],
+                               np.asarray(x)[0, :, 2] * 7.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("interpret", [True, False])
+def test_sidedelta_int8_tables(interpret):
+    """int8 vals + per-adapter scale + int16 indices: exact against the
+    int8 oracle (dequant is the same f32 math), and within dequant
+    tolerance (<1e-2) of the unquantized f32 reference at SHiRA-realistic
+    value magnitudes."""
+    rng = np.random.RandomState(5)
+    B, S, n, m, A, K = 3, 8, 128, 512, 3, 200
+    x = jnp.asarray(rng.randn(B, S, n), jnp.float32)
+    rows = jnp.asarray(rng.randint(0, n, (A, K)), jnp.int16)
+    cols = jnp.asarray(rng.randint(0, m, (A, K)), jnp.int16)
+    vf = (0.05 * rng.randn(A, K)).astype(np.float32)   # adapter-scale values
+    qs = [ops.quantize_table(vf[a]) for a in range(A)]
+    vq = jnp.asarray(np.stack([q for q, _ in qs]))
+    scale = jnp.asarray(np.array([s for _, s in qs], np.float32))
+    assert vq.dtype == jnp.int8
+    ids = jnp.asarray([0, -1, 2], jnp.int32)
+    out = ops.sidedelta(x, rows, cols, vq, ids, m=m, scale=scale,
+                        interpret=interpret, bm=256, kc=128)
+    want_q = ref.sidedelta_int8_ref(x, rows, cols, vq, scale, ids, m)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want_q),
+                               atol=1e-5, rtol=1e-5)
+    want_f = ref.sidedelta_ref(x, rows.astype(jnp.int32),
+                               cols.astype(jnp.int32), jnp.asarray(vf),
+                               ids, m)
+    assert float(np.max(np.abs(np.asarray(out) - np.asarray(want_f)))) < 1e-2
+    assert np.all(np.asarray(out)[1] == 0)             # ids = -1 stays zero
+
+
+def test_sidedelta_plan_tiles_budget():
+    """The VMEM helper must respect its budget knob: a tighter budget
+    yields a smaller m-tile, never a plan that misses the grid."""
+    from repro.kernels.sidedelta import plan_tiles, vmem_estimate
+    S, n, m, K = 16, 512, 16384, 2048
+    big_bm, big_kc = plan_tiles(S, n, m, K, vmem_budget=8 << 20)
+    small_bm, small_kc = plan_tiles(S, n, m, K, vmem_budget=2 << 20)
+    assert small_bm <= big_bm
+    assert vmem_estimate(S, n, m, K, small_bm, small_kc) <= 2 << 20
+    for bm in (big_bm, small_bm):
+        assert bm % 128 == 0 and (-(-m // 128) * 128) % bm == 0
+
+
 def test_sidedelta_table_roundtrip():
     """Host prep: packed flat indices -> padded (rows, cols, vals)."""
     flat = np.asarray([5, 17, 33], np.int64)

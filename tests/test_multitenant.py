@@ -282,6 +282,118 @@ def test_group_fusion_preserves_outputs(dense_setup):
                                        atol=1e-5)
 
 
+def test_int8_device_tables_serving(dense_setup):
+    """int8 device-side tables (store QuantPack -> engine tables with no
+    f32 round trip) must reproduce the sequential reference served with
+    the dequantized packs: same greedy tokens, logits within 1e-2. The
+    int8 ``vals`` tables must be >=3x smaller than the f32 ones (int8 vs
+    f32 values) and the whole table set >=2x smaller (int16 indices)."""
+    import tempfile
+
+    from repro.hub import AdapterStore
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = dense_setup
+        store = AdapterStore(tempfile.mkdtemp(prefix="mt-int8-"))
+        for p in packs:
+            store.add(p, values="int8")
+        eng8 = MultiTenantEngine(cfg, params, store=store,
+                                 table_dtype="int8")
+        engf = MultiTenantEngine(cfg, params, store=store,
+                                 table_dtype="f32")
+        for p in packs:
+            eng8.register(p.name)
+            engf.register(p.name)
+        # the quantized resident form reached the engine un-dequantized
+        assert set(eng8._qpacks) == {p.name for p in packs}
+        B, S, T = 5, 8, 4
+        toks = jax.random.randint(jax.random.PRNGKey(8), (B, S), 0,
+                                  cfg.vocab_size)
+        names = ["a0", "a2", None, "a1", "a0"]
+        out8, _ = eng8.generate({"tokens": toks}, names, T)
+        dq = [store.get(p.name) for p in packs]   # what int8 really serves
+        out_seq, logits_seq = sequential_reference(
+            cfg, params, dq, np.asarray(toks), names, T)
+        np.testing.assert_array_equal(np.asarray(out8), out_seq)
+
+        from repro.serving.multitenant import greedy_decode
+        ids = eng8.ids_for(names)
+        p8 = eng8.wrapped_params(ids)
+        _, logits8 = greedy_decode(
+            cfg, {"tokens": toks}, T,
+            lambda b: eng8._prefill(p8, b, S + T + 8),
+            lambda t, c, pos: eng8._decode(p8, t, c, pos))
+        np.testing.assert_allclose(np.asarray(logits8, np.float32),
+                                   logits_seq, atol=1e-2)
+
+        nb8, nbf = eng8.table_nbytes(), engf.table_nbytes()
+        assert nbf["vals"] >= 3 * nb8["vals"], (nbf, nb8)
+        assert nbf["total"] >= 2 * nb8["total"], (nbf, nb8)
+        # int8 tables really are int8/int16 on device
+        t = next(iter(eng8._tables.values()))
+        assert t["vals"].dtype == jnp.int8
+        assert t["rows"].dtype == jnp.int16
+        assert "scale" in t
+
+
+def test_int8_tables_skip_f32_roundtrip(dense_setup):
+    """An adapter registered from an int8 store must land in the device
+    tables with its ORIGINAL quantized values — one rounding at pack time,
+    not a second quantization of the dequantized f32 form."""
+    import tempfile
+
+    from repro.hub import AdapterStore
+    cfg, params, packs = dense_setup
+    store = AdapterStore(tempfile.mkdtemp(prefix="mt-rt-"))
+    store.add(packs[0], values="int8")
+    engine = MultiTenantEngine(cfg, params, store=store, table_dtype="int8")
+    engine.register(packs[0].name)
+    engine._rebuild()
+    qp = store.get_raw(packs[0].name)
+    qtables = qp.int8_tables()
+    path = next(iter(qtables))
+    idx, vq, scale = qtables[path]
+    t = engine._tables[path]
+    k = idx.shape[-1]
+    vals_dev = np.asarray(t["vals"]).reshape(-1, 1, t["vals"].shape[-1])
+    np.testing.assert_array_equal(vals_dev[:, 0, :k],
+                                  np.asarray(vq).reshape(vals_dev.shape[0],
+                                                         -1))
+    np.testing.assert_allclose(
+        np.asarray(t["scale"]).reshape(-1)[0], scale * qp.alpha)
+
+
+def test_forced_compiled_mode_on_cpu(dense_setup):
+    """interpret=False threaded through the engine -> pdot -> kernel must
+    serve correctly under JAX_PLATFORMS=cpu (the compiled tile-plan
+    dispatch) and match the default interpret-mode engine exactly."""
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = dense_setup
+        default = MultiTenantEngine(cfg, params)
+        compiled = MultiTenantEngine(cfg, params, interpret=False)
+        for p in packs:
+            default.register(p)
+            compiled.register(p)
+        B, S, T = 4, 8, 3
+        toks = jax.random.randint(jax.random.PRNGKey(9), (B, S), 0,
+                                  cfg.vocab_size)
+        names = ["a0", "a1", "a2", None]
+        want, _ = default.generate({"tokens": toks}, names, T)
+        got, _ = compiled.generate({"tokens": toks}, names, T)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sidedelta_backend_context():
+    """layers.sidedelta_backend must set the trace-time flag and restore
+    the previous value on exit (incl. the auto default off-TPU)."""
+    assert layers.sidedelta_interpret() == (jax.default_backend() != "tpu")
+    with layers.sidedelta_backend(False):
+        assert layers.sidedelta_interpret() is False
+        with layers.sidedelta_backend(True):
+            assert layers.sidedelta_interpret() is True
+        assert layers.sidedelta_interpret() is False
+    assert layers.sidedelta_interpret() == (jax.default_backend() != "tpu")
+
+
 def test_unsupported_target_rejected():
     cfg = get_smoke_config("starcoder2-7b")
     params = lm.init_params(cfg, jax.random.PRNGKey(0))

@@ -52,6 +52,49 @@ def test_scatter_set_then_add_inverse(n, m, seed, alpha):
     np.testing.assert_allclose(np.asarray(w2), np.asarray(w), atol=1e-5)
 
 
+@given(B=st.integers(1, 4), S=st.integers(1, 8),
+       n=st.integers(3, 160), m=st.integers(3, 520),
+       K=st.integers(0, 300), seed=st.integers(0, 2 ** 16),
+       int8=st.booleans(), interpret=st.booleans())
+@settings(max_examples=25, deadline=None)
+def test_sidedelta_tiled_matches_ref(B, S, n, m, K, seed, int8, interpret):
+    """The tiled+vectorised sidedelta (interpret AND compiled dispatch)
+    must match ``sidedelta_ref`` for arbitrary (B, S, n, m, K): K=0,
+    all-base batches (ids=-1), nonzeros straddling m-tile boundaries (bm
+    is forced to 128 so any m > 128 tiles), and int8 tables within dequant
+    tolerance."""
+    rng = np.random.RandomState(seed)
+    A = rng.randint(1, 4)
+    x = jnp.asarray(rng.randn(B, S, n), jnp.float32)
+    rows = jnp.asarray(rng.randint(0, n, (A, K)), jnp.int32)
+    # bias columns toward tile edges so boundary straddling is common
+    cols_np = rng.randint(0, m, (A, K))
+    if K and m > 130:
+        edge = rng.randint(0, K, max(K // 4, 1))
+        cols_np[:, edge] = rng.choice([127, 128, m - 1], edge.shape[0])
+    cols = jnp.asarray(cols_np, jnp.int32)
+    vf = (0.05 * rng.randn(A, K)).astype(np.float32)
+    ids = jnp.asarray(rng.randint(-1, A, (B,)), jnp.int32)
+    if int8:
+        pairs = [ops.quantize_table(vf[a]) for a in range(A)]
+        vals = jnp.asarray(np.stack([q for q, _ in pairs]))
+        scale = jnp.asarray(np.array([s for _, s in pairs], np.float32))
+        want = ref.sidedelta_int8_ref(x, rows, cols, vals, scale, ids, m)
+        tol = 1e-5   # vs the int8 oracle: same dequant math, exact
+    else:
+        vals, scale = jnp.asarray(vf), None
+        want = ref.sidedelta_ref(x, rows, cols, vals, ids, m)
+        tol = 1e-5
+    out = ops.sidedelta(x, rows, cols, vals, ids, m=m, scale=scale,
+                        interpret=interpret, bm=128, kc=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+    if int8:   # and the dequant stays within the serving tolerance
+        want_f = ref.sidedelta_ref(x, rows, cols, jnp.asarray(vf), ids, m)
+        assert float(np.max(np.abs(
+            np.asarray(out) - np.asarray(want_f, np.float32)))) < 1e-2
+
+
 @given(n=st.integers(64, 256), m=st.integers(64, 256),
        sparsity=st.floats(0.9, 0.995), seed=st.integers(0, 2 ** 16))
 @settings(**SETTINGS)
