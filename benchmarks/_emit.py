@@ -15,12 +15,15 @@ trajectories and fail PRs that regress them:
 The regression gate (``check_regression.py``) compares a run's metrics
 against ``benchmarks/baseline.json``:
 
-  {"multi_tenant": {"gate": {"tokens_per_s_batched": 40.0}}, ...}
+  {"multi_tenant": {"gate": {"tokens_per_s_batched": 40.0},
+                    "gate_max": {"p99_ttft_ms": 900.0}}, ...}
 
-Every gated metric is HIGHER-IS-BETTER: the gate trips when
+``gate`` metrics are HIGHER-IS-BETTER: the gate trips when
 ``current < baseline * (1 - threshold)`` (threshold defaults to 25%).
-Metrics present in a run but absent from the baseline are informational
-only — so new metrics can ship before a baseline exists for them.
+``gate_max`` metrics are LOWER-IS-BETTER (latencies): the gate trips when
+``current > baseline * (1 + threshold)``. Metrics present in a run but
+absent from the baseline are informational only — so new metrics can ship
+before a baseline exists for them.
 
 Refreshing the baseline: run the bench with ``--smoke --json`` on a
 CI-class machine, then copy the gated metrics into baseline.json at ~60%
@@ -38,10 +41,21 @@ SCHEMA_VERSION = 1
 # refuses baselines that gate a metric its bench never emits (catches typos
 # in baseline refreshes at unit-test time, not in a red CI run).
 GATED_METRICS = {
-    "multi_tenant": ("tokens_per_s_batched", "tokens_per_s_sequential"),
+    "multi_tenant": ("tokens_per_s_batched", "tokens_per_s_sequential",
+                     "resident_requests_per_gb_batched"),
     "continuous_batching": ("tokens_per_s_continuous",
-                            "tokens_per_s_fixed"),
+                            "tokens_per_s_fixed",
+                            "tokens_per_s_paged",
+                            "resident_requests_per_gb_continuous",
+                            "resident_requests_per_gb_paged",
+                            "residency_gain_paged"),
     "rapid_switching": ("switches_per_s",),
+}
+
+# lower-is-better counterparts (latencies), gateable via "gate_max".
+GATED_MAX_METRICS = {
+    "multi_tenant": ("p99_ttft_ms_batched",),
+    "continuous_batching": ("p99_ttft_ms_continuous", "p99_ttft_ms_paged"),
 }
 
 
@@ -78,22 +92,32 @@ def compare(current: dict, baseline: dict,
     if current.get("schema") != SCHEMA_VERSION:
         return [f"{bench}: schema {current.get('schema')!r} != "
                 f"{SCHEMA_VERSION} (refresh the bench or this gate)"]
-    gates = baseline.get(bench, {}).get("gate", {})
-    known = GATED_METRICS.get(bench)
     failures = []
-    for metric, base in gates.items():
-        if known is not None and metric not in known:
-            failures.append(f"{bench}: baseline gates unknown metric "
-                            f"{metric!r} (allowed: {list(known)})")
-            continue
-        cur = current.get("metrics", {}).get(metric)
-        if cur is None:
-            failures.append(f"{bench}: gated metric {metric!r} missing "
-                            "from the run")
-            continue
-        floor = base * (1.0 - threshold)
-        if cur < floor:
-            failures.append(
-                f"{bench}: {metric} regressed: {cur:.2f} < {floor:.2f} "
-                f"(baseline {base:.2f}, threshold {threshold:.0%})")
+    for key, known, lower_is_better in (
+            ("gate", GATED_METRICS.get(bench), False),
+            ("gate_max", GATED_MAX_METRICS.get(bench), True)):
+        for metric, base in baseline.get(bench, {}).get(key, {}).items():
+            if known is not None and metric not in known:
+                failures.append(f"{bench}: baseline {key}s unknown metric "
+                                f"{metric!r} (allowed: {list(known)})")
+                continue
+            cur = current.get("metrics", {}).get(metric)
+            if cur is None:
+                failures.append(f"{bench}: gated metric {metric!r} missing "
+                                "from the run")
+                continue
+            if lower_is_better:
+                ceil = base * (1.0 + threshold)
+                if cur > ceil:
+                    failures.append(
+                        f"{bench}: {metric} regressed: {cur:.2f} > "
+                        f"{ceil:.2f} (baseline {base:.2f}, threshold "
+                        f"{threshold:.0%})")
+            else:
+                floor = base * (1.0 - threshold)
+                if cur < floor:
+                    failures.append(
+                        f"{bench}: {metric} regressed: {cur:.2f} < "
+                        f"{floor:.2f} (baseline {base:.2f}, threshold "
+                        f"{threshold:.0%})")
     return failures

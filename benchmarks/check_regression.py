@@ -44,6 +44,14 @@ def main() -> int:
             print(f"[{status:>4}] {bench}.{metric}: {shown} "
                   f"(baseline {base:.2f}, floor "
                   f"{base * (1 - args.threshold):.2f})")
+        for metric, base in sorted(
+                baseline.get(bench, {}).get("gate_max", {}).items()):
+            cur = current.get("metrics", {}).get(metric)
+            status = "FAIL" if any(metric in f for f in fails) else "ok"
+            shown = "missing" if cur is None else f"{cur:.2f}"
+            print(f"[{status:>4}] {bench}.{metric}: {shown} "
+                  f"(baseline {base:.2f}, ceiling "
+                  f"{base * (1 + args.threshold):.2f})")
         failures.extend(fails)
     if failures:
         print("\nREGRESSION GATE TRIPPED:")

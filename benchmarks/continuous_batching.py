@@ -1,6 +1,6 @@
-"""Continuous batching vs fixed-batch multi-tenant serving.
+"""Continuous batching vs fixed-batch vs paged multi-tenant serving.
 
-The same mixed-adapter request trace served two ways:
+The same mixed-adapter request trace served three ways:
 
   * fixed-batch — ``MultiTenantEngine.generate``: requests are grouped into
     batches of ``--slots`` up front; each batch decodes as a unit, so a
@@ -9,11 +9,26 @@ The same mixed-adapter request trace served two ways:
   * continuous  — ``repro.hub.ServingEngine``: one shared cache with
     ``--slots`` lanes, per-lane adapter ids AND cache positions; a lane is
     recycled to the next queued request the step after its request ends.
+  * paged       — ``repro.hub.PagedServingEngine``: block-table paged KV
+    with COW prefix sharing and chunked prefill, run on a second trace
+    where every request opens with a shared system prefix and carries a
+    short per-request suffix (the production shape paging targets).
 
-With uniform request lengths the two do the same work; the win appears under
-mixed ``max_tokens`` (``--mixed-lengths``), where fixed batches serialize on
-their slowest member. Parity is checked token-for-token against the
-fixed-batch engine on every request.
+With uniform request lengths the first two do the same work; the win
+appears under mixed ``max_tokens`` (``--mixed-lengths``), where fixed
+batches serialize on their slowest member. Parity is checked
+token-for-token against the fixed-batch engine on every request (the paged
+trace is pinned against the continuous engine, itself pinned here).
+
+Besides throughput, the bench reports **memory residency** — resident
+requests per GB of pinned KV. Both engines are provisioned for the same
+worst-case request (``cache_size`` rows); the lane engine pins
+``slots * cache_size`` rows no matter what the trace does, while the paged
+engine pins only the working set actually referenced by admitted requests
+(shared prefix pages counted once; evictable registry-only pages excluded
+— they are reclaimed on demand). The paged engine must clear >= 2x.
+``p99_ttft_ms_*`` (wall-clock submit -> first token, queue wait included)
+is gate-tracked lower-is-better via ``gate_max``.
 
 ``--json [PATH]`` writes the machine-readable result (schema in
 ``_emit.py``) that CI's tier3-bench gate tracks.
@@ -34,7 +49,11 @@ from repro.configs import get_config, get_smoke_config
 from repro.launch.serve import make_adapters
 from repro.models import layers, lm
 from repro.serving import MultiTenantEngine
-from repro.hub import AdapterStore, ServingEngine
+from repro.hub import AdapterStore, PagedServingEngine, ServingEngine
+
+
+def p99_ttft_ms(futs) -> float:
+    return float(np.percentile([f.ttft * 1e3 for f in futs], 99))
 
 
 def serve_fixed_batches(cfg, params, packs, toks, names, lens, slots):
@@ -115,19 +134,82 @@ def main() -> None:
                 for i in range(R)]
         dt_cc = engine.run()
 
+        # ---- paged trace: shared system prefix + short per-request suffix.
+        # Both engines are provisioned for the same worst-case request
+        # (cache_size rows); paging's point is paying for actual tokens.
+        cache_size = args.prompt_len + args.tokens + 8
+        prefix = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(2), (8,), 0, cfg.vocab_size), np.int32)
+        sufs = [int(rng.integers(0, 4)) for _ in range(R)]
+        prompts = [np.concatenate([prefix, np.asarray(jax.random.randint(
+            jax.random.PRNGKey(100 + i), (sufs[i],), 0, cfg.vocab_size))]
+            ).astype(np.int32) for i in range(R)]
+        lens_p = [int(rng.integers(2, 6)) for _ in range(R)]
+
+        ref = ServingEngine(cfg, params, slots=args.slots, store=store,
+                            cache_size=cache_size,
+                            table_dtype="int8" if args.int8 else "f32")
+        for p in packs:
+            ref.register(p.name)
+        rfuts = [ref.submit(prompts[i], names[i], max_tokens=lens_p[i])
+                 for i in range(R)]
+        ref.run()
+
+        paged = PagedServingEngine(
+            cfg, params, slots=args.slots, num_pages=97, page_size=2,
+            max_len=cache_size, chunk_size=4, store=store,
+            table_dtype="int8" if args.int8 else "f32")
+        for p in packs:
+            paged.register(p.name)
+        # seed the prefix registry the way production would: the system
+        # prompt is prefilled once per tenant (prefix pages are salted by
+        # the adapter stack), every later request shares its pages
+        for nm in dict.fromkeys(names):
+            paged.submit(prefix, nm, max_tokens=1)
+        paged.run()
+        pfuts = [paged.submit(prompts[i], names[i], max_tokens=lens_p[i])
+                 for i in range(R)]
+        dt_pg = paged.run()
+
     n_tok = sum(lens)
     for i, f in enumerate(futs):
         got = f.result()
         assert np.array_equal(got, want[i]), \
             f"request {i} diverged: {got} != {want[i]}"
+    n_tok_p = sum(lens_p)
+    for i, (rf, pf) in enumerate(zip(rfuts, pfuts)):
+        assert np.array_equal(pf.result(), rf.result()), \
+            f"paged request {i} diverged: {pf.result()} != {rf.result()}"
+
+    # residency: resident requests per GB of KV the engine pins for them.
+    # The lane engine pins its full stripe allocation; the paged engine
+    # pins the peak working set of admitted requests (see module doc).
+    res_cont = args.slots / (engine.kv_cache_bytes() / 1e9)
+    res_paged = paged.peak_resident / (
+        paged.peak_ws_pages * paged.page_bytes() / 1e9)
+    gain = res_paged / res_cont
+
     print(f"arch={cfg.name} requests={R} slots={args.slots} "
           f"tokens={n_tok} adapters={args.adapters}")
     print(f"fixed-batch: {dt_fix*1e3:8.1f}ms  {n_tok/dt_fix:8.1f} tok/s")
     print(f"continuous:  {dt_cc*1e3:8.1f}ms  {n_tok/dt_cc:8.1f} tok/s "
           f"({engine.step_count} steps, {engine.decode_slot_waste} idle-lane "
           f"steps)")
+    print(f"paged:       {dt_pg*1e3:8.1f}ms  {n_tok_p/dt_pg:8.1f} tok/s "
+          f"({paged.step_count} steps, {paged.prefill_chunks} prefill "
+          f"chunks, {paged.pool.prefix_hits} prefix hits, "
+          f"{paged.pool.cow_copies} COW copies)")
+    print(f"residency: continuous {res_cont:8.1f} req/GB "
+          f"(slots x {engine.cache_size}-row stripes)  paged "
+          f"{res_paged:8.1f} req/GB ({paged.peak_resident} resident / "
+          f"{paged.peak_ws_pages} pages x {paged.page_size} rows)  "
+          f"gain {gain:.2f}x")
+    print(f"p99 TTFT: continuous {p99_ttft_ms(futs):.1f}ms  "
+          f"paged {p99_ttft_ms(pfuts):.1f}ms")
     print(f"speedup: {dt_fix/dt_cc:.2f}x   PARITY OK (token-for-token, "
-          f"{R} requests)")
+          f"{R} + {R} requests)")
+    assert gain >= 2.0, \
+        f"paged residency gain {gain:.2f}x < 2x over the stripe engine"
 
     if args.json is not None:
         table_bytes = engine.engine.table_nbytes()
@@ -136,14 +218,27 @@ def main() -> None:
             metrics={
                 "tokens_per_s_continuous": n_tok / dt_cc,
                 "tokens_per_s_fixed": n_tok / dt_fix,
+                "tokens_per_s_paged": n_tok_p / dt_pg,
                 "speedup": dt_fix / dt_cc,
                 "decode_steps": engine.step_count,
                 "idle_lane_steps": engine.decode_slot_waste,
                 "adapter_table_bytes": table_bytes["total"],
+                "resident_requests_per_gb_continuous": res_cont,
+                "resident_requests_per_gb_paged": res_paged,
+                "residency_gain_paged": gain,
+                "p99_ttft_ms_continuous": p99_ttft_ms(futs),
+                "p99_ttft_ms_paged": p99_ttft_ms(pfuts),
+                "prefix_hits": paged.pool.prefix_hits,
+                "cow_copies": paged.pool.cow_copies,
             },
             meta={"smoke": args.smoke, "requests": R, "slots": args.slots,
                   "tokens": n_tok, "adapters": args.adapters,
-                  "int8": bool(args.int8)})
+                  "int8": bool(args.int8),
+                  "paged": {"num_pages": paged.num_pages,
+                            "page_size": paged.page_size,
+                            "peak_ws_pages": paged.peak_ws_pages,
+                            "peak_used_pages": paged.peak_used_pages,
+                            "peak_resident": paged.peak_resident}})
         print(f"wrote {_emit.emit(res, args.json or None)}")
 
 

@@ -36,5 +36,6 @@ demand, so a fleet of thousands of tenants pays only for its working set
 """
 from repro.hub.packio import (PackFormatError, QuantPack,  # noqa: F401
                               load_pack, peek_pack, save_pack)
-from repro.hub.serving import ServeFuture, ServingEngine  # noqa: F401
+from repro.hub.serving import (PagedServingEngine, ServeFuture,  # noqa: F401
+                               ServingEngine)
 from repro.hub.store import AdapterStore  # noqa: F401

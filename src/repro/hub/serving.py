@@ -1,32 +1,52 @@
-"""ServingEngine: request-level serving with continuous batching.
+"""Request-level serving: continuous batching over lanes or over pages.
 
-The fixed-batch multi-tenant path (``MultiTenantEngine.generate``) decodes a
-*batch* as one unit: every request enters at step 0 and the whole batch runs
-until the longest request finishes. This engine serves *requests*:
+Two engines share one request API (``submit`` -> ``ServeFuture``,
+``step()``/``run()`` drive the loop; greedy decode; per-request adapters
+routed through ``MultiTenantEngine``'s side-delta tables):
 
-  fut = engine.submit(prompt_tokens, adapter="a0", max_tokens=32)
-  engine.run()                 # or step() from your own loop
-  out = fut.result()           # (n,) int32 generated tokens
+**ServingEngine** — the lane engine. ``slots`` decode lanes share one
+jitted decode step and one contiguous cache allocation; every lane owns a
+full ``cache_size`` KV stripe. Admission prefloods the request at batch 1
+and splices the resulting cache into the lane's batch row — the splice uses
+explicit per-leaf batch-axis metadata from ``lm.cache_batch_axes`` (KV
+leaves carry scan-stack dims in front of batch; hybrid mamba leaves two of
+them), never shape inference. Capacity is the number of free *lanes*: a
+lane is busy for a request's whole lifetime even though a short request
+uses a sliver of its stripe. That stranded memory is what the paged engine
+removes.
 
-Internally there are ``slots`` decode lanes sharing ONE jitted decode step
-and one cache allocation. Each slot carries its own adapter id (routed
-through the MultiTenantEngine side-delta tables — an adapter name, an
-adapter stack, or base) and its own cache position: the decode step takes a
-(B,) position vector (``models.attention`` per-slot decode), so lanes at
-different depths coexist in one forward pass. When a request hits EOS or
-its token budget, its future resolves and the slot is recycled to the next
-queued request at the following step — no drain barrier, which is what
-keeps utilization high under mixed-length traffic.
+**PagedServingEngine** — the paged engine (dense/moe text models). KV
+memory is one global page pool per layer stack (``lm.init_paged_cache``;
+optionally int8 ``QuantKV`` pages) and each request owns a *block table*
+mapping logical KV blocks to physical pages, so resident bytes track
+actual tokens, not worst-case stripes:
 
-Admission runs the request's prefill at batch 1 with its own adapter and
-splices the resulting KV/SSM cache into the slot's lane of the shared cache
-(``dynamic_update_slice`` along the batch axis). Greedy decode is used
-throughout, so a request's tokens are identical to what the fixed-batch
-engine produces for the same prompt+adapter — the parity tests pin this
-token-for-token.
+  - **Admission is gated on free pages, not free lanes**: a request enters
+    when ``PagePool.can_alloc`` covers its page budget (prompt +
+    max_tokens - 1 rounded up to pages, plus COW reserve); otherwise it
+    waits FIFO. A slot is just a row in the batched decode step.
+  - **Prefix sharing (COW)**: prompt prefixes are hashed per page boundary
+    (salted by the request's adapter stack — identical tokens under
+    different adapters produce different KV) into the pool's registry
+    after prefill; a later request with the same adapter and prefix maps
+    the shared pages into its table instead of recomputing them. Shared pages (refcount > 1) are immutable — the engine resolves
+    every write range with ``_ensure_writable``, copying a shared page to a
+    fresh one (``copy_page``) before the first divergent write. Cold
+    registry entries are evicted LRU when the free list runs dry.
+  - **Chunked prefill**: prompts prefill in fixed ``chunk_size`` slices,
+    one chunk per engine step, interleaved with the decode pass over live
+    lanes — a long prompt never stalls live decode by more than one step.
+    Chunks are padded to a single static shape (one jit trace); padding
+    rows write to the pinned scratch page 0 and are masked out of
+    attention.
+
+Greedy decode throughout, so both engines are token-for-token identical to
+the fixed-batch engine for the same prompt+adapter (pinned by the parity
+tests, including through shared-prefix admission).
 """
 from __future__ import annotations
 
+import functools
 import time
 from collections import deque
 from typing import Any, Dict, List, Optional
@@ -50,6 +70,9 @@ class ServeFuture:
         self.tokens: List[int] = []
         self.submitted_step: Optional[int] = None
         self.finished_step: Optional[int] = None
+        self.submit_time: Optional[float] = None
+        self.ttft: Optional[float] = None     # seconds to first token
+        self.first_token_step: Optional[int] = None
         self._done = False
 
     def done(self) -> bool:
@@ -71,24 +94,84 @@ class _Pending:
         self.eos_id = eos_id
 
 
-def _slot_insert(big, small, slot: int):
+def _slot_insert(big, small, slot: int, axes):
     """Splice a batch-1 cache tree into lane ``slot`` of the shared cache.
 
-    The batch axis differs per leaf kind (KV caches carry scan-stack dims in
-    front, hybrid mamba caches two of them) — it is recovered per leaf as
-    the unique axis where the shapes differ (1 vs slots)."""
-    def leaf(bg, sm):
-        diff = [ax for ax, (a, b) in enumerate(zip(bg.shape, sm.shape))
-                if a != b]
-        if not diff:          # slots == 1: the lane IS the whole cache
-            return sm.astype(bg.dtype)
-        assert len(diff) == 1, (bg.shape, sm.shape)
+    ``axes`` is the matching pytree of per-leaf batch-axis indices from
+    ``lm.cache_batch_axes`` — KV leaves carry scan-stack dims in front of
+    batch and hybrid mamba leaves carry two, so the axis is metadata, not
+    something to infer from shapes (which is ambiguous whenever any other
+    dim equals ``slots``)."""
+    def leaf(bg, sm, ax):
         return jax.lax.dynamic_update_slice_in_dim(
-            bg, sm.astype(bg.dtype), slot, axis=diff[0])
-    return jax.tree.map(leaf, big, small)
+            bg, sm.astype(bg.dtype), slot, axis=ax)
+    return jax.tree.map(leaf, big, small, axes)
 
 
-class ServingEngine:
+def _prefix_salt(adapter: Tenant) -> bytes:
+    """Prefix-registry namespace for one request's adapter stack. KV pages
+    hold the output of the forward pass that wrote them, so identical
+    tokens under different adapters must never share pages."""
+    return repr(adapter).encode()
+
+
+def _resolve_adapter(engine: MultiTenantEngine, adapter: Tenant) -> Tenant:
+    """Normalize + validate a request's tenant, lazily pulling members from
+    the attached AdapterStore."""
+    adapter = normalize_tenant(adapter)
+    from repro.core.switching import tenant_members
+    for m in tenant_members(adapter):
+        if m not in engine.packs:
+            store = engine.store
+            if store is not None and m in store:
+                engine.register(m)       # lazy: pull it from the store
+            else:
+                raise KeyError(f"request names unregistered adapter {m!r}")
+    return adapter
+
+
+class _EngineCommon:
+    """Request bookkeeping shared by the lane and paged engines."""
+
+    def register(self, pack) -> None:
+        self.engine.register(pack)
+
+    def pending(self) -> int:
+        return len(self._queue) + sum(p is not None for p in self._active)
+
+    def kv_cache_bytes(self) -> int:
+        return sum(int(x.nbytes) for x in jax.tree.leaves(self.caches))
+
+    def _emit(self, slot: int, token: int) -> None:
+        """Record one generated token. ``_pos`` is NOT touched here — it
+        always points at the cache index the next decode step writes to."""
+        p = self._active[slot]
+        p.fut.tokens.append(int(token))
+        self.tokens_out += 1
+        if len(p.fut.tokens) == 1:
+            p.fut.first_token_step = self.step_count
+            if p.fut.submit_time is not None:
+                p.fut.ttft = time.perf_counter() - p.fut.submit_time
+        self._last[slot] = token
+        if (len(p.fut.tokens) >= p.fut.max_tokens
+                or (p.eos_id is not None and int(token) == p.eos_id)):
+            self._finish(slot)
+
+    def run(self, max_steps: int = 100_000) -> float:
+        """Drive step() until every queued request resolved; returns
+        wall-clock seconds."""
+        t0 = time.perf_counter()
+        for _ in range(max_steps):
+            if not self.step() and not self._queue \
+                    and all(p is None for p in self._active):
+                break
+        else:
+            raise RuntimeError(f"run() hit max_steps={max_steps} with "
+                               f"{self.pending()} requests in flight")
+        return time.perf_counter() - t0
+
+
+class ServingEngine(_EngineCommon):
     """Continuous-batching front end over the multi-tenant side-delta path."""
 
     def __init__(self, cfg, params, *, slots: int = 4, cache_size: int = 128,
@@ -99,13 +182,12 @@ class ServingEngine:
             raise ValueError("encoder-only archs have no decode serving path")
         self.cfg = cfg
         self.slots = slots
-        # the batch-axis splice recovers the lane axis as "the axis whose
-        # size differs"; cache_size == slots would make it ambiguous
-        self.cache_size = cache_size + 1 if cache_size == slots else cache_size
+        self.cache_size = cache_size
         self.engine = MultiTenantEngine(cfg, params, scheduler=scheduler,
                                         store=store, table_dtype=table_dtype,
                                         interpret=interpret)
-        self.caches = lm.init_cache(cfg, slots, self.cache_size)
+        self.caches = lm.init_cache(cfg, slots, cache_size)
+        self._axes = lm.cache_batch_axes(cfg)
         self._active: List[Optional[_Pending]] = [None] * slots
         self._pos = np.zeros((slots,), np.int32)      # next cache write index
         self._last = np.zeros((slots,), np.int32)     # last generated token
@@ -119,41 +201,29 @@ class ServingEngine:
     # Request API
     # ------------------------------------------------------------------
 
-    def register(self, pack) -> None:
-        self.engine.register(pack)
-
     def submit(self, prompt_tokens, adapter: Tenant = None,
                max_tokens: int = 16,
                eos_id: Optional[int] = None) -> ServeFuture:
         """Queue one request; returns its future. ``adapter`` is a registered
         adapter id, a stack of ids, or None for the base model."""
+        if max_tokens < 1:
+            raise ValueError("max_tokens must be >= 1")
         prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
         prefix = (self.cfg.num_prefix_embeds
                   if self.cfg.modality == "vision" else 0)
-        need = prompt.shape[0] + prefix + max_tokens
+        # the final generated token is returned but never written back to
+        # the cache, so a request needs one slot less than prompt+max_tokens
+        need = prompt.shape[0] + prefix + max_tokens - 1
         if need > self.cache_size:
             raise ValueError(f"prompt ({prompt.shape[0]}) + max_tokens "
                              f"({max_tokens}) needs {need} cache slots, "
                              f"engine has {self.cache_size}")
-        if max_tokens < 1:
-            raise ValueError("max_tokens must be >= 1")
-        adapter = normalize_tenant(adapter)
-        from repro.core.switching import tenant_members
-        for m in tenant_members(adapter):
-            if m not in self.engine.packs:
-                store = self.engine.store
-                if store is not None and m in store:
-                    self.engine.register(m)   # lazy: pull it from the store
-                else:
-                    raise KeyError(f"request names unregistered adapter "
-                                   f"{m!r}")
+        adapter = _resolve_adapter(self.engine, adapter)
         fut = ServeFuture(self._rid, adapter, max_tokens)
+        fut.submit_time = time.perf_counter()
         self._rid += 1
         self._queue.append(_Pending(fut, prompt, eos_id))
         return fut
-
-    def pending(self) -> int:
-        return len(self._queue) + sum(p is not None for p in self._active)
 
     # ------------------------------------------------------------------
     # Scheduling loop
@@ -174,24 +244,14 @@ class ServingEngine:
         self._pos[slot] = 0
         self._last[slot] = 0
 
-    def _emit(self, slot: int, token: int) -> None:
-        """Record one generated token. ``_pos`` is NOT touched here — it
-        always points at the cache index the next decode step writes to."""
-        p = self._active[slot]
-        p.fut.tokens.append(int(token))
-        self.tokens_out += 1
-        self._last[slot] = token
-        if (len(p.fut.tokens) >= p.fut.max_tokens
-                or (p.eos_id is not None and int(token) == p.eos_id)):
-            self._finish(slot)
-
     def _admit(self, slot: int, p: _Pending) -> None:
         names: List[Tenant] = [p.fut.adapter]
         ids = self.engine.ids_for(names)
         wp = self.engine.wrapped_params(ids)
         logits, c1 = self.engine._prefill(wp, self._batch_for(p.prompt),
                                           self.cache_size)
-        self.caches = _slot_insert(self.caches, c1, slot)
+        self.caches = [_slot_insert(big, small, slot, ax) for big, small, ax
+                       in zip(self.caches, c1, self._axes)]
         prefix = (self.cfg.num_prefix_embeds
                   if self.cfg.modality == "vision" else 0)
         self._active[slot] = p
@@ -228,15 +288,257 @@ class ServingEngine:
             self._emit(s, int(nxt[s]))
         return True
 
-    def run(self, max_steps: int = 100_000) -> float:
-        """Drive step() until every queued request resolved; returns
-        wall-clock seconds."""
-        t0 = time.perf_counter()
-        for _ in range(max_steps):
-            if not self.step() and not self._queue \
-                    and all(p is None for p in self._active):
-                break
-        else:
-            raise RuntimeError(f"run() hit max_steps={max_steps} with "
-                               f"{self.pending()} requests in flight")
-        return time.perf_counter() - t0
+
+# ---------------------------------------------------------------------------
+# Paged engine
+# ---------------------------------------------------------------------------
+
+class _PagedRequest:
+    __slots__ = ("fut", "prompt", "eos_id", "need", "nblk", "state", "done",
+                 "pages", "reserve")
+
+    def __init__(self, fut: ServeFuture, prompt: np.ndarray,
+                 eos_id: Optional[int], need: int, nblk: int):
+        self.fut = fut
+        self.prompt = prompt
+        self.eos_id = eos_id
+        self.need = need          # KV rows this request may write
+        self.nblk = nblk          # block-table entries it needs
+        self.state = "prefill"
+        self.done = 0             # prompt tokens already in the cache
+        self.pages: List[int] = []     # block-table pages (1 ref each)
+        self.reserve: List[int] = []   # preallocated COW spares
+
+
+class PagedServingEngine(_EngineCommon):
+    """Continuous batching over a paged KV pool with COW prefix sharing and
+    chunked-prefill admission. Dense/moe text models only (SSM state is O(1)
+    per request; vision prefixes are not token-addressed)."""
+
+    def __init__(self, cfg, params, *, slots: int = 4, num_pages: int = 64,
+                 page_size: int = 8, max_len: Optional[int] = None,
+                 chunk_size: Optional[int] = None,
+                 scheduler: Optional[FusedLRU] = None, store=None,
+                 table_dtype: str = "f32", quant_kv: bool = False,
+                 interpret: Optional[bool] = None):
+        if cfg.encoder_only:
+            raise ValueError("encoder-only archs have no decode serving path")
+        from repro.serving.kvcache import PagePool, copy_page, pages_for
+        self.cfg = cfg
+        self.slots = slots
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_len = max_len or (num_pages - 1) * page_size
+        self.max_blocks = pages_for(self.max_len, page_size)
+        self.chunk_size = chunk_size or page_size
+        self.engine = MultiTenantEngine(cfg, params, scheduler=scheduler,
+                                        store=store, table_dtype=table_dtype,
+                                        interpret=interpret)
+        self.pool = PagePool(num_pages, page_size)
+        self.caches = lm.init_paged_cache(cfg, num_pages, page_size,
+                                          quant=quant_kv)
+        self._bt = np.zeros((slots, self.max_blocks), np.int32)
+        self._pos = np.zeros((slots,), np.int32)
+        self._last = np.zeros((slots,), np.int32)
+        self._active: List[Optional[_PagedRequest]] = [None] * slots
+        self._queue: "deque[_PagedRequest]" = deque()
+        self._rid = 0
+        self.step_count = 0
+        self.tokens_out = 0
+        self.decode_slot_waste = 0
+        self.prefill_chunks = 0
+        self.peak_resident = 0        # max concurrently admitted requests
+        self.peak_used_pages = 0      # incl. evictable registry-only pages
+        self.peak_ws_pages = 0        # pages pinned by admitted requests
+
+        from repro.models import layers as L
+
+        def _dec(p, t, c, pos, bt):
+            with L.sidedelta_backend(interpret):
+                return lm.decode_step(p, self.cfg, t, c, pos, block_tables=bt)
+
+        def _pfc(p, toks, c, bt, start, valid):
+            with L.sidedelta_backend(interpret):
+                return lm.prefill_chunk(p, self.cfg, toks, c, bt, start,
+                                        valid)
+
+        self._decode = jax.jit(_dec)
+        self._prefill_chunk = jax.jit(_pfc)
+        self._copy = jax.jit(functools.partial(copy_page, page_axis=1))
+
+    def page_bytes(self) -> int:
+        """Device bytes of ONE physical page across the whole layer stack."""
+        return self.kv_cache_bytes() // self.num_pages
+
+    # ------------------------------------------------------------------
+    # Request API
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt_tokens, adapter: Tenant = None,
+               max_tokens: int = 16,
+               eos_id: Optional[int] = None) -> ServeFuture:
+        from repro.serving.kvcache import pages_for
+        if max_tokens < 1:
+            raise ValueError("max_tokens must be >= 1")
+        prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        # the final generated token is never written back: one row less
+        need = prompt.shape[0] + max_tokens - 1
+        if need > self.max_len:
+            raise ValueError(f"prompt ({prompt.shape[0]}) + max_tokens "
+                             f"({max_tokens}) needs {need} KV rows, engine "
+                             f"caps requests at {self.max_len}")
+        nblk = pages_for(need, self.page_size)
+        if nblk > self.num_pages - 1:
+            raise ValueError(f"request needs {nblk} pages, pool has "
+                             f"{self.num_pages - 1}")
+        adapter = _resolve_adapter(self.engine, adapter)
+        fut = ServeFuture(self._rid, adapter, max_tokens)
+        fut.submit_time = time.perf_counter()
+        self._rid += 1
+        self._queue.append(_PagedRequest(fut, prompt, eos_id, need, nblk))
+        return fut
+
+    # ------------------------------------------------------------------
+    # Page plumbing
+    # ------------------------------------------------------------------
+
+    def _try_admit(self, slot: int, r: _PagedRequest) -> bool:
+        """Map the request into ``slot`` if the pool can cover its pages:
+        unshared blocks, plus a COW reserve for the boundary page (when the
+        prefix match ends inside a shared page) and for the prompt tail
+        (prefix registration re-shares it, so the first decode write must
+        copy). Takes no pages on failure."""
+        p = self.page_size
+        L_ = r.prompt.shape[0]
+        shared_len, shared = self.pool.match_prefix(
+            r.prompt, salt=_prefix_salt(r.fut.adapter))
+        cow = int(shared_len < len(shared) * p)
+        cow += int(r.need > L_ and L_ % p != 0)
+        n_owned = r.nblk - len(shared)
+        if not self.pool.can_alloc(n_owned + cow):
+            self.pool.release(shared)
+            return False
+        fresh = self.pool.alloc(n_owned + cow)
+        owned, r.reserve = fresh[:n_owned], fresh[n_owned:]
+        row = list(shared) + owned
+        r.pages = list(row)
+        self._bt[slot, :] = 0
+        self._bt[slot, :len(row)] = row
+        r.state = "prefill"
+        r.done = shared_len
+        self._active[slot] = r
+        r.fut.submitted_step = self.step_count
+        return True
+
+    def _ensure_writable(self, slot: int, lo: int, hi: int) -> None:
+        """COW every shared page under write range [lo, hi)."""
+        p = self.page_size
+        r = self._active[slot]
+        for blk in range(lo // p, (hi - 1) // p + 1):
+            pg = int(self._bt[slot, blk])
+            if not self.pool.is_shared(pg):
+                continue
+            dst = r.reserve.pop() if r.reserve else self.pool.alloc(1)[0]
+            self.caches = self._copy(self.caches, pg, dst)
+            self._bt[slot, blk] = dst
+            r.pages[r.pages.index(pg)] = dst
+            self.pool.release([pg])
+            self.pool.cow_copies += 1
+
+    def _finish(self, slot: int) -> None:
+        r = self._active[slot]
+        r.fut.finished_step = self.step_count
+        r.fut._done = True
+        self.pool.release(r.pages + r.reserve)
+        r.pages, r.reserve = [], []
+        self._active[slot] = None
+        self._bt[slot, :] = 0
+        self._pos[slot] = 0
+        self._last[slot] = 0
+
+    def _prefill_step(self, slot: int) -> None:
+        from repro.serving.kvcache import pages_for
+        r = self._active[slot]
+        L_ = r.prompt.shape[0]
+        lo = r.done
+        hi = min(L_, lo + self.chunk_size)
+        self._ensure_writable(slot, lo, hi)
+        toks = np.zeros((1, self.chunk_size), np.int32)
+        toks[0, :hi - lo] = r.prompt[lo:hi]
+        ids = self.engine.ids_for([r.fut.adapter])
+        wp = self.engine.wrapped_params(ids)
+        logits, self.caches = self._prefill_chunk(
+            wp, jnp.asarray(toks), self.caches,
+            jnp.asarray(self._bt[slot:slot + 1]),
+            jnp.int32(lo), jnp.int32(hi - lo))
+        r.done = hi
+        self.prefill_chunks += 1
+        if hi == L_:
+            # registry refs re-share the prompt pages (incl. the pristine
+            # partial tail); the COW reserve covers the first decode write
+            self.pool.register_prefix(
+                r.prompt, [int(x) for x in
+                           self._bt[slot, :pages_for(L_, self.page_size)]],
+                salt=_prefix_salt(r.fut.adapter))
+            r.state = "live"
+            self._pos[slot] = L_
+            self._emit(slot, int(np.argmax(np.asarray(logits[0]))))
+
+    # ------------------------------------------------------------------
+    # Scheduling loop
+    # ------------------------------------------------------------------
+
+    def step(self) -> bool:
+        """FIFO-admit while pages last, run ONE prefill chunk, then one
+        decode step over every live lane. Returns False when drained."""
+        for slot in range(self.slots):
+            if self._active[slot] is None and self._queue:
+                if not self._try_admit(slot, self._queue[0]):
+                    break
+                self._queue.popleft()
+        pf = [s for s in range(self.slots) if self._active[s] is not None
+              and self._active[s].state == "prefill"]
+        live = [s for s in range(self.slots) if self._active[s] is not None
+                and self._active[s].state == "live"]
+        self.peak_resident = max(self.peak_resident, len(pf) + len(live))
+        self.peak_used_pages = max(self.peak_used_pages,
+                                   self.pool.used_pages())
+        # working set = distinct pages pinned by admitted requests (block
+        # tables, shared prefixes counted once, COW reserves). Registry-only
+        # pages are excluded: they are an LRU cache, reclaimable on demand.
+        ws = set()
+        for s in pf + live:
+            ws.update(int(x) for x in self._bt[s] if x)
+            ws.update(self._active[s].reserve)
+        self.peak_ws_pages = max(self.peak_ws_pages, len(ws))
+        if not pf and not live:
+            return bool(self._queue)
+        self.step_count += 1
+        if pf:
+            self._prefill_step(pf[0])
+        if live:
+            self.decode_slot_waste += self.slots - len(live)
+            live_set = set(live)
+            names = [self._active[s].fut.adapter if s in live_set else None
+                     for s in range(self.slots)]
+            self.engine.schedule([names[s] for s in live])
+            ids = self.engine.ids_for(names)
+            wp = self.engine.wrapped_params(ids)
+            for s in live:
+                self._ensure_writable(s, int(self._pos[s]),
+                                      int(self._pos[s]) + 1)
+            # idle / still-prefilling lanes decode against the scratch page
+            mask = np.zeros((self.slots,), bool)
+            mask[live] = True
+            bt = np.where(mask[:, None], self._bt, 0)
+            pos = np.where(mask, self._pos, 0)
+            logits, self.caches = self._decode(
+                wp, jnp.asarray(self._last[:, None]), self.caches,
+                jnp.asarray(pos), jnp.asarray(bt))
+            nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+            for s in live:
+                self._pos[s] += 1      # this step's KV landed at _pos[s]
+                self._emit(s, int(nxt[s]))
+        return True

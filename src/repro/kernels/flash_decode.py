@@ -9,6 +9,13 @@ pass (q laid out as (B, KV, G, D)).
 
 Grid: (B, KV, S // Sb) — the sequence axis iterates innermost so scratch
 accumulation across blocks is sequential per (batch, kv-head).
+
+``flash_decode_paged`` is the block-table variant: K/V live in a global
+page pool (P, page, KV, D) and each request's logical block ``i`` resolves
+to physical page ``block_tables[b, i]``. The tables ride in as scalar
+prefetch (``pltpu.PrefetchScalarGridSpec``) so the K/V index maps can
+dereference them when scheduling block DMAs — the kernel body is the same
+online-softmax loop, walking pages instead of contiguous blocks.
 """
 from __future__ import annotations
 
@@ -88,3 +95,86 @@ def flash_decode_blocks(q: jax.Array, k: jax.Array, v: jax.Array,
         ],
         interpret=interpret,
     )(kv_len, q, k, v)
+
+
+def _flash_decode_paged_kernel(kvlen_ref, bt_ref, q_ref, k_ref, v_ref,
+                               out_ref, acc_ref, m_ref, l_ref, *, page: int):
+    del bt_ref  # consumed by the index maps (scalar prefetch)
+    b = pl.program_id(0)
+    blk = pl.program_id(2)
+    nblk = pl.num_programs(2)
+
+    @pl.when(blk == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (page, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)          # (page, D)
+    kv_len = kvlen_ref[b]
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = blk * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    s = jnp.where(pos < kv_len, s, NEG_INF)            # (G, page)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(blk == nblk - 1)
+    def _():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
+
+
+def flash_decode_paged(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                       block_tables: jax.Array, kv_len: jax.Array, *,
+                       interpret: bool = False) -> jax.Array:
+    """q: (B, KV, G, D); k_pool/v_pool: (P, page, KV, D) physical pages;
+    block_tables: (B, nblk) int32 (entry 0 = scratch page); kv_len: (B,)
+    int32 per-request valid lengths. Returns (B, KV, G, D).
+
+    Positions >= kv_len[b] are masked, so null table entries (scratch) and
+    unwritten page tails contribute nothing.
+    """
+    B, KV, G, D = q.shape
+    page = k_pool.shape[1]
+    nblk = block_tables.shape[1]
+    kernel = functools.partial(_flash_decode_paged_kernel, page=page)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, nblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, i, kvlen, bt: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, i, kvlen, bt: (bt[b, i], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, i, kvlen, bt: (bt[b, i], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, i, kvlen, bt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(kv_len, jnp.int32), jnp.asarray(block_tables, jnp.int32),
+      q, k_pool, v_pool)

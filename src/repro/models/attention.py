@@ -233,6 +233,120 @@ def gqa_decode(params, cfg: ModelConfig, x, cache: KVCache, pos) -> Tuple[jax.Ar
 
 
 # ---------------------------------------------------------------------------
+# Paged GQA: the cache is a global page pool (P, page, KV, D) per layer plus
+# per-request block tables (B, nblk) — see repro.serving.kvcache. Decode and
+# chunk-prefill write through the table and attend against the gathered
+# contiguous view, so the math (and, in f32, the bits) matches the
+# contiguous cache path token-for-token.
+# ---------------------------------------------------------------------------
+
+def _paged_kv_mod():
+    from repro.serving import kvcache  # deferred: serving imports models
+    return kvcache
+
+
+def gqa_decode_paged(params, cfg: ModelConfig, x, cache: KVCache,
+                     block_tables, pos) -> Tuple[jax.Array, KVCache]:
+    """x: (B, 1, d); cache: page pools (P, page, KV, D) [or QuantKV];
+    block_tables: (B, nblk) int32; pos: (B,) per-request write index."""
+    KVC = _paged_kv_mod()
+    B = x.shape[0]
+    pos = jnp.asarray(pos)
+    positions = pos[:, None]                               # (B, 1)
+    q, k, v = _gqa_qkv(params, cfg, x, positions)
+    valid = jnp.ones((B, 1), bool)
+    ck = KVC.paged_write(cache.k, k, block_tables, positions, valid)
+    cv = KVC.paged_write(cache.v, v, block_tables, positions, valid)
+    kk = KVC.paged_gather(ck, block_tables)                # (B, S_max, KV, D)
+    vv = KVC.paged_gather(cv, block_tables)
+    out = _attend_block(q, _maybe_repeat_kv(cfg, kk), _maybe_repeat_kv(cfg, vv),
+                        positions, jnp.arange(kk.shape[1]),
+                        causal=True, prefix_len=0, kv_len=pos + 1)
+    return dense(out.reshape(B, 1, -1), params["wo"]), KVCache(ck, cv)
+
+
+def gqa_prefill_chunk(params, cfg: ModelConfig, x, cache: KVCache,
+                      block_tables, start, kv_len) -> Tuple[jax.Array, KVCache]:
+    """One chunk of a paged prefill. x: (B, C, d) — rows at absolute
+    positions ``start + i``; rows with position >= ``kv_len`` are padding
+    (their K/V land in the scratch page, their outputs are garbage the
+    caller discards). ``kv_len`` is the total valid length including this
+    chunk."""
+    KVC = _paged_kv_mod()
+    B, C, _ = x.shape
+    positions = start + jnp.arange(C)                      # (C,)
+    q, k, v = _gqa_qkv(params, cfg, x, positions)
+    posg = jnp.broadcast_to(positions[None], (B, C))
+    valid = posg < kv_len
+    ck = KVC.paged_write(cache.k, k, block_tables, posg, valid)
+    cv = KVC.paged_write(cache.v, v, block_tables, posg, valid)
+    kk = KVC.paged_gather(ck, block_tables)
+    vv = KVC.paged_gather(cv, block_tables)
+    out = _attend_block(q, _maybe_repeat_kv(cfg, kk), _maybe_repeat_kv(cfg, vv),
+                        positions, jnp.arange(kk.shape[1]),
+                        causal=cfg.causal, prefix_len=0, kv_len=kv_len)
+    return dense(out.reshape(B, C, -1), params["wo"]), KVCache(ck, cv)
+
+
+def mla_decode_paged(params, cfg: ModelConfig, x, cache: KVCache,
+                     block_tables, pos) -> Tuple[jax.Array, KVCache]:
+    """Matrix-absorbed paged decode: cache.k pools c_kv (P, page, rank),
+    cache.v pools k_rope (P, page, rope_dim)."""
+    KVC = _paged_kv_mod()
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    pos = jnp.asarray(pos)
+    positions = pos[:, None]
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    c_kv_new, k_rope_new = _mla_ckv(params, cfg, x, positions)
+    valid = jnp.ones((B, 1), bool)
+    ck = KVC.paged_write(cache.k, c_kv_new, block_tables, positions, valid)
+    cv = KVC.paged_write(cache.v, k_rope_new, block_tables, positions, valid)
+    cc = KVC.paged_gather(ck, block_tables)                # (B, S_max, rank)
+    cr = KVC.paged_gather(cv, block_tables)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(m.qk_nope_head_dim + m.qk_rope_head_dim,
+                                       jnp.float32))
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_eff, cc.astype(jnp.float32))
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                           cr.astype(jnp.float32))) * scale
+    valid_k = jnp.arange(cc.shape[1])[None, None, None, :] <= \
+        pos[:, None, None, None]
+    scores = jnp.where(valid_k, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhqs,bsr->bqhr", probs, cc.astype(jnp.float32))
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bqhr,rhv->bqhv", out_lat,
+                     w_uv.astype(jnp.float32)).astype(compute_dtype())
+    return dense(out.reshape(B, 1, -1), params["wo"]), KVCache(ck, cv)
+
+
+def mla_prefill_chunk(params, cfg: ModelConfig, x, cache: KVCache,
+                      block_tables, start, kv_len) -> Tuple[jax.Array, KVCache]:
+    """One chunk of a paged MLA prefill: write the chunk's latents, then
+    attend with per-head K/V expanded from the gathered latent view."""
+    KVC = _paged_kv_mod()
+    B, C, _ = x.shape
+    positions = start + jnp.arange(C)
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    c_kv, k_rope = _mla_ckv(params, cfg, x, positions)
+    posg = jnp.broadcast_to(positions[None], (B, C))
+    valid = posg < kv_len
+    ck = KVC.paged_write(cache.k, c_kv, block_tables, posg, valid)
+    cv = KVC.paged_write(cache.v, k_rope, block_tables, posg, valid)
+    cc = KVC.paged_gather(ck, block_tables)
+    cr = KVC.paged_gather(cv, block_tables)
+    k, v = _mla_expand_kv(params, cfg, cc, cr)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = _attend_block(q, k, v, positions, jnp.arange(k.shape[1]),
+                        causal=True, prefix_len=0, kv_len=kv_len)
+    return dense(out.reshape(B, C, -1), params["wo"]), KVCache(ck, cv)
+
+
+# ---------------------------------------------------------------------------
 # MLA — Multi-head Latent Attention (DeepSeek-V2)
 # ---------------------------------------------------------------------------
 

@@ -65,12 +65,37 @@ def dense_block_prefill(params, cfg: ModelConfig, h, cache_size, *, prefix_len=0
     return h, cache
 
 
-def dense_block_decode(params, cfg: ModelConfig, h, cache, pos):
+def dense_block_decode(params, cfg: ModelConfig, h, cache, pos,
+                       block_tables=None):
     x = rms_norm(h, params["attn_norm"]["scale"], cfg.norm_eps)
-    if cfg.attn_type == "mla":
+    if block_tables is not None:
+        if cfg.attn_type == "mla":
+            a, cache = attn.mla_decode_paged(params["attn"], cfg, x, cache,
+                                             block_tables, pos)
+        else:
+            a, cache = attn.gqa_decode_paged(params["attn"], cfg, x, cache,
+                                             block_tables, pos)
+    elif cfg.attn_type == "mla":
         a, cache = attn.mla_decode(params["attn"], cfg, x, cache, pos)
     else:
         a, cache = attn.gqa_decode(params["attn"], cfg, x, cache, pos)
+    h = h + a
+    x = rms_norm(h, params["mlp_norm"]["scale"], cfg.norm_eps)
+    h = h + mlp(params["mlp"], x, cfg.act)
+    return h, cache
+
+
+def dense_block_prefill_chunk(params, cfg: ModelConfig, h, cache,
+                              block_tables, start, kv_len):
+    """Paged chunk prefill: like dense_block_prefill but writing one padded
+    chunk of positions [start, kv_len) through a block table."""
+    x = rms_norm(h, params["attn_norm"]["scale"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, cache = attn.mla_prefill_chunk(params["attn"], cfg, x, cache,
+                                          block_tables, start, kv_len)
+    else:
+        a, cache = attn.gqa_prefill_chunk(params["attn"], cfg, x, cache,
+                                          block_tables, start, kv_len)
     h = h + a
     x = rms_norm(h, params["mlp_norm"]["scale"], cfg.norm_eps)
     h = h + mlp(params["mlp"], x, cfg.act)
@@ -116,12 +141,36 @@ def moe_block_prefill(params, cfg: ModelConfig, h, cache_size, *, prefix_len=0):
     return h, cache
 
 
-def moe_block_decode(params, cfg: ModelConfig, h, cache, pos):
+def moe_block_decode(params, cfg: ModelConfig, h, cache, pos,
+                     block_tables=None):
     x = rms_norm(h, params["attn_norm"]["scale"], cfg.norm_eps)
-    if cfg.attn_type == "mla":
+    if block_tables is not None:
+        if cfg.attn_type == "mla":
+            a, cache = attn.mla_decode_paged(params["attn"], cfg, x, cache,
+                                             block_tables, pos)
+        else:
+            a, cache = attn.gqa_decode_paged(params["attn"], cfg, x, cache,
+                                             block_tables, pos)
+    elif cfg.attn_type == "mla":
         a, cache = attn.mla_decode(params["attn"], cfg, x, cache, pos)
     else:
         a, cache = attn.gqa_decode(params["attn"], cfg, x, cache, pos)
+    h = h + a
+    x = rms_norm(h, params["mlp_norm"]["scale"], cfg.norm_eps)
+    y, _ = moe_ffn(params["moe"], cfg, x)
+    h = h + y
+    return h, cache
+
+
+def moe_block_prefill_chunk(params, cfg: ModelConfig, h, cache,
+                            block_tables, start, kv_len):
+    x = rms_norm(h, params["attn_norm"]["scale"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, cache = attn.mla_prefill_chunk(params["attn"], cfg, x, cache,
+                                          block_tables, start, kv_len)
+    else:
+        a, cache = attn.gqa_prefill_chunk(params["attn"], cfg, x, cache,
+                                          block_tables, start, kv_len)
     h = h + a
     x = rms_norm(h, params["mlp_norm"]["scale"], cfg.norm_eps)
     y, _ = moe_ffn(params["moe"], cfg, x)
@@ -149,7 +198,11 @@ def mamba_block_prefill(params, cfg: ModelConfig, h, cache_size, *, prefix_len=0
     return h + y, cache
 
 
-def mamba_block_decode(params, cfg: ModelConfig, h, cache, pos):
+def mamba_block_decode(params, cfg: ModelConfig, h, cache, pos,
+                       block_tables=None):
+    # SSM state is O(1) per request — paging does not apply; the kwarg only
+    # keeps the scan-body signature uniform.
+    del block_tables
     x = rms_norm(h, params["norm"]["scale"], cfg.norm_eps)
     y, cache = mamba2.mamba_decode(params["mixer"], cfg, x, cache, pos)
     return h + y, cache

@@ -285,7 +285,8 @@ def prefill(params, cfg: ModelConfig, batch, cache_size: int):
     return logits, caches
 
 
-def _stage_decode(stage_params, kind, cfg, h, caches, pos, shared=None):
+def _stage_decode(stage_params, kind, cfg, h, caches, pos, shared=None,
+                  block_tables=None):
     if kind == "hybrid":
         emb = h
 
@@ -308,25 +309,70 @@ def _stage_decode(stage_params, kind, cfg, h, caches, pos, shared=None):
 
     def body(hh, xs):
         lp, c = xs
-        return decode_fn(lp, cfg, hh, c, pos)
+        return decode_fn(lp, cfg, hh, c, pos, block_tables=block_tables)
 
     h, new = jax.lax.scan(body, h, (stage_params, caches))
     return h, new
 
 
-def decode_step(params, cfg: ModelConfig, tokens, caches, pos):
+def decode_step(params, cfg: ModelConfig, tokens, caches, pos,
+                block_tables=None):
     """tokens: (B, 1) int32; pos: scalar cache index shared by the batch, or
     a (B,) int32 vector of per-request indices (continuous batching — every
-    slot decodes at its own depth). Returns (logits (B, V), new caches)."""
+    slot decodes at its own depth). With ``block_tables`` ((B, nblk) int32)
+    the caches are page pools (see ``init_paged_cache``) and ``pos`` must be
+    the (B,) per-request write index. Returns (logits (B, V), new caches)."""
+    if block_tables is not None and cfg.family == "hybrid":
+        raise NotImplementedError("paged decode covers attention caches only")
     h = embed(params["embed"], tokens)
     new_caches = []
     for sp, cache, (kind, _) in zip(params["stages"], caches, stage_plan(cfg)):
         h, nc = _stage_decode(sp, kind, cfg, h, cache, pos,
-                              shared=params.get("shared_attn"))
+                              shared=params.get("shared_attn"),
+                              block_tables=block_tables)
         new_caches.append(nc)
     h = rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
     tie = params["embed"]["emb"] if cfg.tie_embeddings else None
     logits = unembed(params.get("unembed"), h[:, 0], tie_to=tie,
+                     softcap=cfg.logit_softcap, logical_vocab=cfg.vocab_size)
+    return logits, new_caches
+
+
+def _stage_prefill_chunk(stage_params, kind, cfg, h, caches, block_tables,
+                         start, kv_len):
+    fn = (B.moe_block_prefill_chunk if kind == "moe"
+          else B.dense_block_prefill_chunk)
+
+    def body(hh, xs):
+        lp, c = xs
+        return fn(lp, cfg, shard_act(hh), c, block_tables, start, kv_len)
+
+    h, new = jax.lax.scan(body, h, (stage_params, caches))
+    return h, new
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens, caches, block_tables,
+                  start, valid):
+    """One padded chunk of a paged prefill.
+
+    tokens: (B, C) int32, columns at absolute positions ``start + i``;
+    ``valid`` (traced scalar) counts the real tokens — padding columns
+    write to the scratch page and are masked out of attention. Returns
+    (logits of the last real token (B, V), updated pool caches)."""
+    if cfg.family not in ("dense", "moe") or cfg.modality != "text":
+        raise NotImplementedError(
+            "chunked paged prefill covers dense/moe text models")
+    h = embed(params["embed"], tokens)
+    kv_len = start + valid
+    new_caches = []
+    for sp, cache, (kind, _) in zip(params["stages"], caches, stage_plan(cfg)):
+        h, nc = _stage_prefill_chunk(sp, kind, cfg, h, cache, block_tables,
+                                     start, kv_len)
+        new_caches.append(nc)
+    h = rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(h, valid - 1, 1, axis=1)[:, 0]
+    tie = params["embed"]["emb"] if cfg.tie_embeddings else None
+    logits = unembed(params.get("unembed"), last, tie_to=tie,
                      softcap=cfg.logit_softcap, logical_vocab=cfg.vocab_size)
     return logits, new_caches
 
@@ -378,3 +424,59 @@ def init_cache(cfg: ModelConfig, bsz: int, cache_size: int):
         else:
             caches.append(_stack(_kv_cache_zeros(cfg, bsz, cache_size), n))
     return caches
+
+
+def cache_batch_axes(cfg: ModelConfig):
+    """Per-stage pytrees mirroring ``init_cache``'s structure whose leaves
+    are the index of that leaf's *batch* axis. Scan-stack dims sit in front
+    of batch (a dense-stage KV leaf is (L, B, S, KV, D) -> axis 1; hybrid
+    mamba leaves are (g, k, B, ...) -> axis 2), so lane splicing must use
+    this metadata rather than inferring the axis from shapes."""
+    axes = []
+    for kind, _ in stage_plan(cfg):
+        if kind == "mamba":
+            axes.append(jax.tree.map(lambda _: 1, _mamba_cache_zeros(cfg, 1)))
+        elif kind == "hybrid":
+            axes.append({
+                "mamba": jax.tree.map(lambda _: 2,
+                                      _mamba_cache_zeros(cfg, 1)),
+                "attn": jax.tree.map(lambda _: 1,
+                                     _kv_cache_zeros(cfg, 1, 1)),
+            })
+        else:
+            axes.append(jax.tree.map(lambda _: 1, _kv_cache_zeros(cfg, 1, 1)))
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Paged cache construction: one page pool per stage, stacked over layers.
+# Leaves are (L, num_pages, page_size, *tail); block tables are shared by
+# every layer, so one (B, nblk) table drives the whole stack.
+# ---------------------------------------------------------------------------
+
+def _kv_pool_zeros(cfg: ModelConfig, num_pages: int, page_size: int,
+                   quant: bool):
+    from repro.serving.kvcache import pool_zeros
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        return KVCache(
+            pool_zeros(num_pages, page_size, (m.kv_lora_rank,),
+                       compute_dtype(), quant),
+            pool_zeros(num_pages, page_size, (m.qk_rope_head_dim,),
+                       compute_dtype(), quant))
+    from repro.models.attention import padded_heads
+    hd = cfg.resolved_head_dim
+    kv = padded_heads(cfg)[1]
+    return KVCache(
+        pool_zeros(num_pages, page_size, (kv, hd), compute_dtype(), quant),
+        pool_zeros(num_pages, page_size, (kv, hd), compute_dtype(), quant))
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     quant: bool = False):
+    if cfg.family not in ("dense", "moe") or cfg.modality != "text":
+        raise NotImplementedError(
+            "paged KV covers dense/moe text models; ssm/hybrid state is O(1) "
+            "per request and vlm prefixes are not token-addressed")
+    return [_stack(_kv_pool_zeros(cfg, num_pages, page_size, quant), n)
+            for _, n in stage_plan(cfg)]

@@ -1,4 +1,6 @@
-from repro.serving.kvcache import (QuantKV, cache_bytes, dequantize_kv,  # noqa: F401
+from repro.serving.kvcache import (PagePool, QuantKV, cache_bytes,  # noqa: F401
+                                   copy_page, dequantize_kv, paged_gather,
+                                   paged_write, pages_for, pool_zeros,
                                    quant_cache_zeros, quantize_kv,
                                    update_quant_cache)
 from repro.serving.multitenant import MultiTenantEngine  # noqa: F401

@@ -1,20 +1,54 @@
-"""int8 KV-cache quantization (per-token-per-head absmax scales).
+"""KV-cache memory: int8 quantization and the paged page-pool layout.
 
-EXPERIMENTS §Dry-run flags qwen1.5-32b (MHA, 40 heads) x decode_32k as the
-one honest misfit: ~5.5 TB of bf16 KV globally. Per-(token, head) absmax
-int8 halves the cache (vs bf16) at <0.5% attention-output error, bringing
-the padded-head variant to ~11 GB/device. The quantized cache is a drop-in
-KVCache replacement for the serving path.
+Two layers live here:
 
-  qk, ks = quantize_kv(k)          # int8 codes + bf16 scales
-  k ~= dequantize_kv(qk, ks)
+**Quantization** (``QuantKV``): per-(token, head) absmax int8 codes + bf16
+scales. EXPERIMENTS §Dry-run flags qwen1.5-32b (MHA, 40 heads) x decode_32k
+as the one honest misfit: ~5.5 TB of bf16 KV globally; int8 halves it at
+<0.5% attention-output error. ``QuantKV`` is both a drop-in contiguous
+cache and the element type of quantized *pages* below.
+
+**Paged layout**: serving no longer gives every request a contiguous
+``cache_size`` stripe. One global page pool per layer stack —
+``(num_pages, page_size, heads, d)`` device arrays (``QuantKV`` for int8
+pages) — is shared by all requests; each request owns a *block table*
+mapping its logical KV blocks to physical pages:
+
+  token position t  ->  page  block_table[t // page_size]
+                        row   t %  page_size
+
+Device-side primitives (pure jax, safe under jit/scan):
+
+  paged_gather(pool, block_tables)       -> contiguous (B, S_max, ...) view
+  paged_write(pool, new, block_tables, positions, valid)  -> scatter rows
+  copy_page(pool, src, dst)              -> clone one physical page (COW)
+
+Host-side policy (``PagePool``): page refcounts, the free list, and a
+refcounted **prefix registry** for copy-on-write prefix sharing. Prompt
+prefixes (hashed per page boundary, plus the final partial page, salted
+by whatever shaped the forward pass — the engine salts with the adapter
+stack) register their pages after prefill; a later request with the same
+salt and prefix shares
+those pages instead of recomputing them — system prompts dominate at
+millions of users, so the shared pages are the resident majority. Shared
+pages are immutable: any writer holding a page with refcount > 1 must
+``copy_page`` it into a fresh page first (the engine resolves this before
+every write range). Registry entries are evicted LRU when the free list
+runs dry, so hot prefixes stay resident and cold ones yield their pages.
+
+Page 0 is a pinned scratch page: padded/invalid writes land there and
+null block-table entries point at it, so gathers and scatters never need
+a branch.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+import hashlib
+from collections import OrderedDict
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class QuantKV(NamedTuple):
@@ -41,17 +75,284 @@ def quant_cache_zeros(shape: Tuple[int, ...]) -> QuantKV:
                    jnp.zeros(shape[:-1] + (1,), jnp.bfloat16))
 
 
-def update_quant_cache(cache: QuantKV, new: jax.Array, pos) -> QuantKV:
-    """Write ``new`` (B, 1, ...) at sequence position ``pos``."""
+def update_quant_cache(cache: QuantKV, new: jax.Array, pos,
+                       seq_axis: int = 1) -> QuantKV:
+    """Write ``new`` (one new token's rows) at sequence position ``pos``.
+
+    ``seq_axis`` is the cache's sequence axis. The serving caches carry
+    scan-stack dims in front of the batch axis (a dense-stage KV leaf is
+    ``(L, B, S, KV, D)`` — sequence at axis 2), so the axis must come from
+    the caller; the historical default of 1 matches a plain unstacked
+    ``(B, S, ...)`` cache only.
+    """
     qn = quantize_kv(new)
-    start = (0, pos) + (0,) * (cache.codes.ndim - 2)
+    if not -cache.codes.ndim <= seq_axis < cache.codes.ndim:
+        raise ValueError(f"seq_axis {seq_axis} out of range for cache rank "
+                         f"{cache.codes.ndim}")
+    seq_axis %= cache.codes.ndim
+    start = tuple(pos if ax == seq_axis else 0
+                  for ax in range(cache.codes.ndim))
     return QuantKV(
         jax.lax.dynamic_update_slice(cache.codes, qn.codes, start),
         jax.lax.dynamic_update_slice(cache.scales, qn.scales, start))
 
 
 def cache_bytes(shape: Tuple[int, ...], quant: bool) -> int:
-    import numpy as np
     n = int(np.prod(shape, dtype=np.int64))
     rows = n // shape[-1]
     return n + rows * 2 if quant else n * 2
+
+
+# ---------------------------------------------------------------------------
+# Paged device primitives. A "pool" is either a jax.Array (P, page, *tail)
+# or a QuantKV whose codes have that shape; block tables are (B, nblk) int32
+# physical page ids (0 = the scratch page).
+# ---------------------------------------------------------------------------
+
+def pool_zeros(num_pages: int, page_size: int, tail: Tuple[int, ...],
+               dtype, quant: bool = False):
+    shape = (num_pages, page_size) + tuple(tail)
+    if quant:
+        return quant_cache_zeros(shape)
+    return jnp.zeros(shape, dtype)
+
+
+def paged_gather(pool, block_tables: jax.Array) -> jax.Array:
+    """Materialise the contiguous view of each request's pages.
+
+    pool: (P, page, *tail) [or QuantKV of that shape];
+    block_tables: (B, nblk) int32. Returns (B, nblk * page, *tail) in the
+    pool dtype (quantized pools dequantize to bf16).
+    """
+    B, nblk = block_tables.shape
+    flat = block_tables.reshape(-1)
+    if isinstance(pool, QuantKV):
+        codes = jnp.take(pool.codes, flat, axis=0)
+        scales = jnp.take(pool.scales, flat, axis=0)
+        x = dequantize_kv(QuantKV(codes, scales))
+    else:
+        x = jnp.take(pool, flat, axis=0)
+    page = x.shape[1]
+    return x.reshape((B, nblk * page) + x.shape[2:])
+
+
+def _write_coords(block_tables: jax.Array, positions: jax.Array,
+                  valid: jax.Array, page_size: int):
+    """(page_id, row) scatter coordinates; invalid rows target scratch 0."""
+    B, nblk = block_tables.shape
+    blk = jnp.clip(positions // page_size, 0, nblk - 1)
+    pages = jnp.take_along_axis(block_tables, blk, axis=1)
+    pages = jnp.where(valid, pages, 0)
+    rows = jnp.where(valid, positions % page_size, 0)
+    return pages, rows
+
+
+def paged_write(pool, new: jax.Array, block_tables: jax.Array,
+                positions: jax.Array, valid: jax.Array):
+    """Scatter token rows into their pages.
+
+    new: (B, C, *tail); positions: (B, C) absolute token indices;
+    valid: (B, C) bool — False rows land in the scratch page (padding /
+    idle lanes). Returns the updated pool.
+    """
+    B, C = positions.shape
+    page_size = (pool.codes if isinstance(pool, QuantKV) else pool).shape[1]
+    pages, rows = _write_coords(block_tables, positions, valid, page_size)
+    pg, rw = pages.reshape(-1), rows.reshape(-1)
+    if isinstance(pool, QuantKV):
+        qn = quantize_kv(new)
+        return QuantKV(
+            pool.codes.at[pg, rw].set(
+                qn.codes.reshape((B * C,) + qn.codes.shape[2:])),
+            pool.scales.at[pg, rw].set(
+                qn.scales.reshape((B * C,) + qn.scales.shape[2:])))
+    return pool.at[pg, rw].set(
+        new.astype(pool.dtype).reshape((B * C,) + new.shape[2:]))
+
+
+def copy_page(pool, src, dst, page_axis: int = 0):
+    """Clone physical page ``src`` into ``dst`` (the device half of COW).
+
+    Works on a single pool or any pytree of pools. ``page_axis`` is the
+    physical-page axis of every leaf (the serving caches carry a leading
+    layer-stack dim, so theirs is 1).
+    """
+    def leaf(x):
+        moved = jnp.moveaxis(x, page_axis, 0)
+        row = moved[src]                     # gather: src may be traced
+        return jnp.moveaxis(moved.at[dst].set(row), 0, page_axis)
+    return jax.tree.map(leaf, pool)
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``tokens`` KV rows."""
+    return max(0, -(-tokens // page_size))
+
+
+# ---------------------------------------------------------------------------
+# Host-side page accounting: refcounts, free list, prefix registry.
+# ---------------------------------------------------------------------------
+
+def _digest(tokens: np.ndarray, salt: bytes = b"") -> bytes:
+    return hashlib.sha1(salt + np.ascontiguousarray(
+        np.asarray(tokens, np.int32)).tobytes()).digest()
+
+
+class PagePool:
+    """Refcounted physical-page allocator with a COW prefix registry.
+
+    Pure host-side metadata — the device arrays live in the engine's cache
+    pytree; this class only decides *which* physical page each logical
+    block maps to. Page 0 is reserved scratch and never allocated.
+
+    Refcount protocol: every holder of a page (a request's block table, or
+    the prefix registry) owns one reference. A page with ``refs > 1`` is
+    shared and therefore immutable — writers must COW it first
+    (``is_shared`` + ``copy_page`` on the device pools). Pages return to
+    the free list when their last reference drops.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is scratch)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.refs = np.zeros(num_pages, np.int32)
+        self.refs[0] = 1                       # scratch, pinned forever
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        # prefix digest -> (page_id, fill). Insertion order is the LRU.
+        self._prefix: "OrderedDict[bytes, Tuple[int, int]]" = OrderedDict()
+        self.prefix_hits = 0
+        self.prefix_shared_tokens = 0
+        self.cow_copies = 0
+        self.evictions = 0
+
+    # -- allocation ----------------------------------------------------
+
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def used_pages(self) -> int:
+        return self.num_pages - 1 - len(self._free)
+
+    def _evictable(self) -> List[bytes]:
+        return [k for k, (pg, _) in self._prefix.items()
+                if self.refs[pg] == 1]
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free) + len(self._evictable())
+
+    def alloc(self, n: int) -> List[int]:
+        """Take ``n`` fresh pages (refcount 1 each), evicting cold prefix
+        registry entries LRU-first if the free list runs dry."""
+        while len(self._free) < n:
+            for key in self._evictable():       # LRU = insertion order
+                pg, _ = self._prefix.pop(key)
+                self._decref(pg)
+                self.evictions += 1
+                break
+            else:
+                raise MemoryError(
+                    f"page pool exhausted: want {n}, "
+                    f"{len(self._free)} free, 0 evictable")
+        out = [self._free.pop() for _ in range(n)]
+        for pg in out:
+            self.refs[pg] = 1
+        return out
+
+    def _decref(self, page: int) -> None:
+        assert self.refs[page] > 0, page
+        self.refs[page] -= 1
+        if self.refs[page] == 0:
+            self._free.append(page)
+
+    def release(self, pages: Sequence[int]) -> None:
+        """Drop one reference per page (request finished / COW replaced)."""
+        for pg in pages:
+            self._decref(int(pg))
+
+    def share(self, page: int) -> int:
+        self.refs[page] += 1
+        return page
+
+    def is_shared(self, page: int) -> bool:
+        return bool(self.refs[page] > 1)
+
+    # -- prefix registry ----------------------------------------------
+
+    def match_prefix(self, tokens: np.ndarray,
+                     salt: bytes = b"") -> Tuple[int, List[int]]:
+        """Longest registered prefix of ``tokens``: (shared_len, pages).
+
+        The caller receives one reference per returned page. Full pages
+        chain from position 0; the final partial page matches only an
+        entry covering exactly the same tokens (same digest, same fill).
+        ``salt`` namespaces the lookup — prefix KV depends on everything
+        that shaped the forward pass (the adapter stack above all), so
+        callers must salt with it or requests would share pages computed
+        under a different model. The match is capped at
+        ``len(tokens) - 1`` so at least one prompt token always runs
+        through the model (its logits seed decoding); when the cap lands
+        inside a shared page, that page stays shared — recomputing its
+        last token is the first divergent write, which COWs it.
+        """
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        p, L = self.page_size, len(tokens)
+        shared: List[int] = []
+        matched = 0
+        for i in range(L // p):
+            ent = self._lookup(_digest(tokens[:(i + 1) * p], salt), p)
+            if ent is None:
+                break
+            shared.append(ent)
+            matched = (i + 1) * p
+        else:
+            r = L - (L // p) * p
+            if r:
+                ent = self._lookup(_digest(tokens, salt), r)
+                if ent is not None:
+                    shared.append(ent)
+                    matched = L
+        shared_len = min(matched, L - 1)
+        while shared and (len(shared) - 1) * p >= shared_len:
+            shared.pop()                         # page past the cap: useless
+        shared_len = min(shared_len, len(shared) * p)
+        for pg in shared:
+            self.share(pg)
+        if shared:
+            self.prefix_hits += 1
+            self.prefix_shared_tokens += shared_len
+        return shared_len, shared
+
+    def _lookup(self, key: bytes, fill: int) -> Optional[int]:
+        ent = self._prefix.get(key)
+        if ent is None or ent[1] != fill:
+            return None
+        self._prefix.move_to_end(key)            # LRU touch
+        return ent[0]
+
+    def register_prefix(self, tokens: np.ndarray, pages: Sequence[int],
+                        salt: bytes = b"") -> None:
+        """Register a prefilled prompt's pages for future sharing.
+
+        ``pages[i]`` must hold tokens ``[i*p, min((i+1)*p, len))`` — i.e.
+        the request's block-table prefix right after prefill, before any
+        decode write (the partial tail must be pristine). ``salt`` must
+        match the one future ``match_prefix`` callers will use (the
+        engine salts with the adapter stack). The registry takes one
+        reference per newly registered page.
+        """
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        p, L = self.page_size, len(tokens)
+        for i, pg in enumerate(pages):
+            end = min((i + 1) * p, L)
+            if end <= i * p:
+                break
+            key = _digest(tokens[:end], salt)
+            if key in self._prefix:
+                continue
+            self._prefix[key] = (int(pg), end - i * p)
+            self.share(int(pg))
+
+    def registered_prefixes(self) -> int:
+        return len(self._prefix)

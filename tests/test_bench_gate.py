@@ -65,6 +65,22 @@ def test_compare_trips_below_threshold():
                         threshold=0.5) == []
 
 
+def test_compare_gate_max_trips_above_ceiling():
+    """gate_max metrics are lower-is-better (latencies): the gate trips
+    when current exceeds baseline * (1 + threshold)."""
+    base = {"multi_tenant": {"gate_max": {"p99_ttft_ms_batched": 100.0}}}
+    assert emit.compare(_result(p99_ttft_ms_batched=80.0), base) == []
+    assert emit.compare(_result(p99_ttft_ms_batched=124.9), base) == []
+    fails = emit.compare(_result(p99_ttft_ms_batched=125.1), base)
+    assert len(fails) == 1 and "regressed" in fails[0]
+    # unknown and missing metrics fail just like the floor gate
+    bad = {"multi_tenant": {"gate_max": {"tokens_per_s_batched": 1.0}}}
+    fails = emit.compare(_result(tokens_per_s_batched=0.5), bad)
+    assert len(fails) == 1 and "unknown metric" in fails[0]
+    fails = emit.compare(_result(speedup=2.0), base)
+    assert len(fails) == 1 and "missing" in fails[0]
+
+
 def test_compare_flags_missing_and_unknown_metrics():
     base = {"multi_tenant": {"gate": {"tokens_per_s_batched": 1.0}}}
     fails = emit.compare(_result(speedup=2.0), base)
@@ -90,6 +106,13 @@ def test_checked_in_baseline_is_valid():
         for metric, floor in gates.items():
             assert metric in emit.GATED_METRICS[bench], (bench, metric)
             assert isinstance(floor, (int, float)) and floor > 0
+    for bench, g in base.items():
+        if isinstance(g, dict) and "gate_max" in g:
+            assert bench in emit.GATED_MAX_METRICS, bench
+            for metric, ceil in g["gate_max"].items():
+                assert metric in emit.GATED_MAX_METRICS[bench], \
+                    (bench, metric)
+                assert isinstance(ceil, (int, float)) and ceil > 0
 
 
 def test_gate_trips_on_doctored_baseline(tmp_path):
