@@ -5,7 +5,7 @@ Every benchmark in this directory can emit a ``BENCH_<name>.json`` file
 trajectories and fail PRs that regress them:
 
   {
-    "schema": 1,
+    "schema": 2,
     "bench": "multi_tenant",          # stable name, keys baseline.json
     "arch": "starcoder2-7b-smoke",
     "metrics": {"tokens_per_s_batched": 123.4, ...},   # numbers only
@@ -33,9 +33,15 @@ catch real regressions, not scheduler jitter).
 from __future__ import annotations
 
 import json
-from typing import Dict, List, Optional
+import math
+from typing import Dict, Iterable, List, Optional, Sequence
 
-SCHEMA_VERSION = 1
+# v2 adds nothing the gate reads — it marks results whose percentile
+# metrics come from the shared ``percentiles()`` helper below. The gate
+# accepts every version in COMPAT_SCHEMAS so checked-in v1 artifacts and
+# old baselines stay comparable.
+SCHEMA_VERSION = 2
+COMPAT_SCHEMAS = (1, 2)
 
 # bench name -> metrics that may be gated in baseline.json. check_regression
 # refuses baselines that gate a metric its bench never emits (catches typos
@@ -50,13 +56,41 @@ GATED_METRICS = {
                             "resident_requests_per_gb_paged",
                             "residency_gain_paged"),
     "rapid_switching": ("switches_per_s",),
+    "slo_load": ("tokens_per_s", "goodput_tok_s", "completed"),
 }
 
 # lower-is-better counterparts (latencies), gateable via "gate_max".
 GATED_MAX_METRICS = {
     "multi_tenant": ("p99_ttft_ms_batched",),
     "continuous_batching": ("p99_ttft_ms_continuous", "p99_ttft_ms_paged"),
+    "slo_load": ("p50_latency_ms", "p99_latency_ms", "p99_ttft_ms",
+                 "slo_violation_rate"),
 }
+
+
+def percentile(samples: Sequence[float], p: float) -> float:
+    """The p-th percentile (0..100) by linear interpolation between order
+    statistics — numpy's default method, without requiring numpy, so every
+    bench and the serving load generator quote identical tail math."""
+    xs = sorted(float(x) for x in samples)
+    if not xs:
+        raise ValueError("percentile of empty sample set")
+    if len(xs) == 1:
+        return xs[0]
+    rank = (p / 100.0) * (len(xs) - 1)
+    lo = math.floor(rank)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = rank - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+def percentiles(samples: Sequence[float], ps: Iterable[float] = (50, 95, 99),
+                name: str = "latency_ms",
+                suffix: str = "") -> Dict[str, float]:
+    """Metric-dict fragment ``{"p50_<name><suffix>": ...}`` for a sample
+    set — e.g. ``percentiles(ttfts, (99,), "ttft_ms", "_paged")``."""
+    return {f"p{g}_{name}{suffix}": percentile(samples, p)
+            for p in ps for g in [int(p) if float(p).is_integer() else p]}
 
 
 def result(bench: str, arch: str, metrics: Dict[str, float],
@@ -89,9 +123,9 @@ def compare(current: dict, baseline: dict,
 
     Returns a list of human-readable failure strings (empty = pass)."""
     bench = current.get("bench", "?")
-    if current.get("schema") != SCHEMA_VERSION:
-        return [f"{bench}: schema {current.get('schema')!r} != "
-                f"{SCHEMA_VERSION} (refresh the bench or this gate)"]
+    if current.get("schema") not in COMPAT_SCHEMAS:
+        return [f"{bench}: schema {current.get('schema')!r} not in "
+                f"{COMPAT_SCHEMAS} (refresh the bench or this gate)"]
     failures = []
     for key, known, lower_is_better in (
             ("gate", GATED_METRICS.get(bench), False),

@@ -5,8 +5,11 @@
       --baseline benchmarks/baseline.json [--threshold 0.25]
 
 Exit code 1 (with a per-metric report) when any gated metric falls more
-than ``threshold`` below its baseline. See ``_emit.py`` for the schema and
-the baseline-refresh procedure.
+than ``threshold`` below its baseline, when a run omits a gated metric,
+or when a baseline bench with gates gets no run file at all — a deleted
+or renamed BENCH artifact must trip the gate, not silently pass (use
+``--allow-missing bench`` for a lane that is intentionally absent).
+See ``_emit.py`` for the schema and the baseline-refresh procedure.
 """
 from __future__ import annotations
 
@@ -26,15 +29,20 @@ def main() -> int:
         os.path.dirname(os.path.abspath(__file__)), "baseline.json"))
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="allowed fractional drop below baseline")
+    ap.add_argument("--allow-missing", action="append", default=[],
+                    metavar="BENCH",
+                    help="baseline bench allowed to have no run file")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
         baseline = json.load(f)
     failures = []
+    seen = set()
     for path in args.runs:
         with open(path) as f:
             current = json.load(f)
         bench = current.get("bench", path)
+        seen.add(bench)
         fails = _emit.compare(current, baseline, threshold=args.threshold)
         gates = baseline.get(bench, {}).get("gate", {})
         for metric, base in sorted(gates.items()):
@@ -53,6 +61,19 @@ def main() -> int:
                   f"(baseline {base:.2f}, ceiling "
                   f"{base * (1 + args.threshold):.2f})")
         failures.extend(fails)
+    # a baseline bench with gates and no run file at all must trip too:
+    # otherwise deleting a BENCH artifact (or renaming a bench) silently
+    # un-gates every metric under it
+    for bench, entry in sorted(baseline.items()):
+        if (not isinstance(entry, dict) or bench in seen
+                or bench in args.allow_missing):
+            continue
+        gated = list(entry.get("gate", {})) + list(entry.get("gate_max", {}))
+        if gated:
+            print(f"[FAIL] {bench}: no run file provided "
+                  f"({len(gated)} gated metrics uncovered)")
+            failures.append(f"{bench}: baseline gates "
+                            f"{sorted(gated)} but no run file was provided")
     if failures:
         print("\nREGRESSION GATE TRIPPED:")
         for f in failures:

@@ -53,7 +53,8 @@ from repro.hub import AdapterStore, PagedServingEngine, ServingEngine
 
 
 def p99_ttft_ms(futs) -> float:
-    return float(np.percentile([f.ttft * 1e3 for f in futs], 99))
+    # shared percentile math with every other latency lane (_emit schema v2)
+    return _emit.percentile([f.ttft * 1e3 for f in futs], 99)
 
 
 def serve_fixed_batches(cfg, params, packs, toks, names, lens, slots):

@@ -248,19 +248,26 @@ def main() -> None:
     print(f"PARITY OK (<{tol:g})")
 
     if args.json is not None:
+        metrics = {
+            "tokens_per_s_batched": n_tok / t_bat,
+            "tokens_per_s_sequential": n_tok / t_seq,
+            "speedup": t_seq / t_bat,
+            "switch_latency_ms": switch_s * 1e3,
+            "adapter_table_bytes": table_bytes["total"],
+            "adapter_table_vals_bytes": table_bytes["vals"],
+            "max_logit_diff": err,
+            "resident_requests_per_gb_batched": res_per_gb,
+            "p99_ttft_ms_batched": ttft_ms,
+        }
+        # capacity-sweep points land in metrics (one lane per registry
+        # size) so the BENCH artifact archives the scaling curve, not
+        # just free-form meta
+        for pt in sweep or []:
+            A = pt["adapters"]
+            metrics[f"capacity_tokens_per_s_a{A}"] = pt["tokens_per_s"]
+            metrics[f"capacity_table_bytes_a{A}"] = pt["table_bytes"]
         res = _emit.result(
-            "multi_tenant", cfg.name,
-            metrics={
-                "tokens_per_s_batched": n_tok / t_bat,
-                "tokens_per_s_sequential": n_tok / t_seq,
-                "speedup": t_seq / t_bat,
-                "switch_latency_ms": switch_s * 1e3,
-                "adapter_table_bytes": table_bytes["total"],
-                "adapter_table_vals_bytes": table_bytes["vals"],
-                "max_logit_diff": err,
-                "resident_requests_per_gb_batched": res_per_gb,
-                "p99_ttft_ms_batched": ttft_ms,
-            },
+            "multi_tenant", cfg.name, metrics=metrics,
             meta={"smoke": args.smoke, "batch": B, "tokens": args.tokens,
                   "adapters": args.adapters, "table_dtype": table_dtype,
                   "capacity_sweep": sweep})

@@ -1,0 +1,206 @@
+"""SLO load bench: tail latency + goodput under Zipf/bursty/overload traffic.
+
+The fixed-batch and continuous-batching benches measure throughput on
+tidy traces. Production multi-adapter serving is judged on *tails*: what
+p99 latency and TTFT look like when arrivals are bursty, adapter
+popularity is Zipf, and an overload phase floods the queue. This bench
+drives the paged engine (``repro.hub.PagedServingEngine``) with
+``repro.serving.loadgen`` through a three-phase trace:
+
+    normal -> overload (rate x ``--overload``) -> normal
+
+and reports, via the shared ``_emit`` schema so CI's tier3 gate can
+track them (percentiles from ``_emit.percentiles`` — the same math every
+latency lane quotes):
+
+  * ``p50/p95/p99_latency_ms`` — end-to-end submit -> final token
+    (queue wait included; gate_max lanes in baseline.json)
+  * ``p50/p99_ttft_ms`` — submit -> first token
+  * ``tokens_per_s`` vs ``goodput_tok_s`` — raw throughput vs tokens from
+    requests that met ``--slo-ms``; under overload these diverge, which
+    is the number that matters
+  * ``slo_violation_rate`` — fraction of completed requests over SLO
+
+``--trace PATH`` installs the serving tracer (``repro.analysis.trace``)
+for the measured run, writes the JSONL + Chrome exports, and prints the
+replay cost model's wall-time attribution (``repro.analysis.replay``).
+``--plan-cache PATH`` installs an autotuned sidedelta tile-plan cache
+(``repro.analysis.autotune``) before the engines compile, and reports
+the plan-cache hit counters after the run.
+
+  PYTHONPATH=src python benchmarks/slo_load.py --smoke --json \
+      --trace TRACE_slo_load.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+import _emit
+from repro.analysis import autotune, replay, trace
+from repro.configs import get_config, get_smoke_config
+from repro.hub import AdapterStore, PagedServingEngine
+from repro.launch.serve import make_adapters
+from repro.models import layers, lm
+from repro.serving import loadgen
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--adapters", type=int, default=3)
+    ap.add_argument("--num-pages", type=int, default=97)
+    ap.add_argument("--page-size", type=int, default=2)
+    ap.add_argument("--chunk-size", type=int, default=4)
+    ap.add_argument("--duration", type=float, default=0.4,
+                    help="seconds per traffic phase")
+    ap.add_argument("--rate", type=float, default=25.0,
+                    help="normal-phase arrival rate (requests/s)")
+    ap.add_argument("--overload", type=float, default=8.0,
+                    help="overload-phase rate multiplier")
+    ap.add_argument("--burst", type=float, default=3.0,
+                    help="arrival burstiness (1 = Poisson)")
+    ap.add_argument("--zipf", type=float, default=1.1,
+                    help="adapter-popularity Zipf exponent")
+    ap.add_argument("--slo-ms", type=float, default=1500.0,
+                    help="per-request end-to-end latency SLO")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the serving trace (JSONL; a .chrome.json "
+                    "twin is written next to it) and print replay "
+                    "attribution")
+    ap.add_argument("--plan-cache", nargs="?", const="benchmarks/"
+                    "plan_cache.json", default=None, metavar="PATH",
+                    help="install an autotuned sidedelta plan cache "
+                    "before compiling")
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="write BENCH_slo_load.json (or PATH) with the "
+                    "_emit schema")
+    args = ap.parse_args()
+
+    installed = 0
+    if args.plan_cache is not None:
+        installed = autotune.maybe_install_file(args.plan_cache)
+        print(f"plan cache: {installed} plans installed "
+              f"from {args.plan_cache}")
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    with layers.compute_precision(jnp.float32):
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        packs = make_adapters(cfg, params, args.adapters,
+                              jax.random.PRNGKey(7), multi_tenant=True)
+        import tempfile
+        store = AdapterStore(tempfile.mkdtemp(prefix="cc-slo-store-"))
+        for p in packs:
+            store.add(p, values="f32")
+
+        prompt_hi = 12
+        gen_max = 8
+        max_len = args.page_size * (
+            (4 + prompt_hi + gen_max) // args.page_size + 2)
+        engine = PagedServingEngine(
+            cfg, params, slots=args.slots, num_pages=args.num_pages,
+            page_size=args.page_size, max_len=max_len,
+            chunk_size=args.chunk_size, store=store)
+        for p in packs:
+            engine.register(p.name)
+
+        gen = loadgen.LoadGen(
+            adapters=[p.name for p in packs], vocab=cfg.vocab_size,
+            seed=args.seed, zipf_s=args.zipf,
+            phases=[loadgen.Phase(args.duration, args.rate, args.burst),
+                    loadgen.Phase(args.duration, args.rate * args.overload,
+                                  args.burst),
+                    loadgen.Phase(args.duration, args.rate, args.burst)],
+            prompt_len=(4, prompt_hi), max_tokens=(2, gen_max),
+            shared_prefix=4)
+        reqs = gen.schedule()
+
+        if not reqs:
+            raise SystemExit("trace generated zero arrivals — raise "
+                             "--rate or --duration")
+        # warmup: compile prefill/decode and seed the prefix registry per
+        # tenant, exactly like steady-state production — first-request
+        # compile time must not masquerade as queueing latency
+        for p in packs:
+            engine.submit(reqs[0].prompt[:4 + 1], p.name, max_tokens=1)
+        engine.run()
+
+        tracer = trace.install() if args.trace else None
+        rep = loadgen.run(engine, reqs, slo_ms=args.slo_ms)
+        if tracer is not None:
+            trace.uninstall()
+
+    per_phase = {pi: len(v) for pi, v in
+                 sorted(rep.per_phase_latencies_ms.items())}
+    print(f"arch={cfg.name} slots={args.slots} adapters={args.adapters} "
+          f"pages={args.num_pages}x{args.page_size}")
+    print(f"offered {rep.offered} requests over "
+          f"{3 * args.duration:.1f}s of trace (per phase: {per_phase}); "
+          f"completed {rep.completed} in {rep.wall_s:.2f}s wall, "
+          f"{rep.steps} steps")
+    lat = _emit.percentiles(rep.latencies_ms, (50, 95, 99), "latency_ms")
+    ttft = _emit.percentiles(rep.ttfts_ms, (50, 99), "ttft_ms")
+    print(f"latency p50/p95/p99: {lat['p50_latency_ms']:.1f} / "
+          f"{lat['p95_latency_ms']:.1f} / {lat['p99_latency_ms']:.1f} ms   "
+          f"TTFT p50/p99: {ttft['p50_ttft_ms']:.1f} / "
+          f"{ttft['p99_ttft_ms']:.1f} ms")
+    print(f"throughput {rep.tokens_per_s:.1f} tok/s; goodput "
+          f"(SLO {args.slo_ms:.0f}ms) {rep.goodput_tok_s:.1f} tok/s; "
+          f"violations {rep.slo_violation_rate:.1%}")
+    print(f"paged: {engine.prefill_chunks} prefill chunks, "
+          f"{engine.pool.prefix_hits} prefix hits, "
+          f"{engine.pool.cow_copies} COW copies")
+    if installed:
+        from repro.kernels.sidedelta import plan_cache_stats
+        print(f"plan cache: {plan_cache_stats['hits']} hits, "
+              f"{plan_cache_stats['misses']} misses, "
+              f"{plan_cache_stats['rejected']} rejected")
+
+    assert rep.completed == rep.offered, \
+        f"dropped requests: {rep.completed}/{rep.offered}"
+
+    if tracer is not None:
+        jsonl = tracer.to_jsonl(args.trace)
+        chrome = tracer.to_chrome(
+            args.trace.rsplit(".jsonl", 1)[0] + ".chrome.json"
+            if args.trace.endswith(".jsonl") else args.trace + ".chrome.json")
+        att = replay.attribute(tracer, wall_us=rep.wall_s * 1e6)
+        print(f"trace: {len(tracer)} events -> {jsonl} (+ {chrome}); "
+              f"spans cover {att['coverage']:.1%} of wall")
+        for row in replay.critical_path(tracer, top=5):
+            print(f"  {row['name']:<16} {row['self_us'] / 1e3:9.2f} ms "
+                  f"({row['frac']:.1%})")
+
+    if args.json is not None:
+        res = _emit.result(
+            "slo_load", cfg.name,
+            metrics={
+                **lat, **ttft,
+                "tokens_per_s": rep.tokens_per_s,
+                "goodput_tok_s": rep.goodput_tok_s,
+                "slo_violation_rate": rep.slo_violation_rate,
+                "completed": rep.completed,
+                "offered": rep.offered,
+                "steps": rep.steps,
+                "prefix_hits": engine.pool.prefix_hits,
+                "cow_copies": engine.pool.cow_copies,
+                "plan_cache_plans": installed,
+            },
+            meta={"smoke": args.smoke, "slots": args.slots,
+                  "adapters": args.adapters, "seed": args.seed,
+                  "slo_ms": args.slo_ms, "rate": args.rate,
+                  "overload": args.overload, "burst": args.burst,
+                  "zipf": args.zipf, "duration": args.duration,
+                  "num_pages": args.num_pages, "page_size": args.page_size,
+                  "trace": args.trace})
+        print(f"wrote {_emit.emit(res, args.json or None)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,2 +1,3 @@
 from repro.analysis.hlo import collective_bytes, cost_summary, memory_summary  # noqa: F401
 from repro.analysis.roofline import HW, roofline_terms  # noqa: F401
+from repro.analysis.trace import Tracer  # noqa: F401

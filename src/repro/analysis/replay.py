@@ -1,0 +1,233 @@
+"""Replay cost model over serving traces: attribution, timelines, what-if.
+
+Input is a trace captured by ``analysis/trace.py`` — the in-memory event
+list, a ``Tracer``, or a JSONL file it exported. The engines emit one
+top-level ``step`` span per scheduling step with nested ``admit`` /
+``prefill_chunk`` / ``decode`` / ``cow_copy`` / ``table_rebuild`` /
+``fuse`` spans, so a serving run's wall clock decomposes into a per-step
+timeline this module reconstructs and explains:
+
+  * ``attribute(events)`` — where did the wall time go? Computes each
+    span's SELF time (duration minus enclosed child spans, so nothing is
+    double counted), sums it by span name and category, and reports the
+    fraction of the observed window covered by top-level spans. The
+    serving engines' coverage is the contract: >= 90% of a traced run's
+    wall time must land in spans (pinned by tests) or the trace is lying
+    about where time goes.
+  * ``step_timeline(events)`` — the per-step record: every ``step`` span
+    with its nested phases, reproducing the engine's scheduling loop
+    tick by tick (step indices come from the span args, not guesswork).
+  * ``critical_path(events)`` — the top-level spans ordered by self-time
+    contribution; in a single-threaded host loop the critical path IS
+    the serial span sequence, so this ranks what to attack first.
+  * ``what_if(events, overlap=..., under=..., scale=...)`` — replay the
+    timeline under a hypothesis: spans named in ``overlap`` are assumed
+    to run concurrently with (hidden under) the ``under`` phase — e.g.
+    "what if H2D table uploads overlapped decode" — and ``scale``
+    multiplies a phase's self time (e.g. a kernel made 2x faster).
+    Returns baseline vs replayed wall and the savings.
+  * ``join_costs(events, costs, hw)`` — join measured span times with
+    ``analysis/hlo.py`` cost extraction (``program_cost`` /
+    ``cost_summary`` dicts): each phase gets a roofline model time
+    ``max(flops/peak, bytes/bw)`` and the measured/model ratio — >> 1
+    means the phase is host-bound, not device-bound.
+
+All times are microseconds (the tracer's unit).
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
+
+from repro.analysis.roofline import HW
+
+TraceLike = Union[str, Sequence[Dict[str, Any]], "object"]
+
+
+def load_trace(source: TraceLike) -> List[Dict[str, Any]]:
+    """Events (ts order) from a JSONL path, a Tracer, or an event list."""
+    if hasattr(source, "events"):                 # a Tracer
+        return list(source.events())
+    if isinstance(source, str):
+        events = []
+        with open(source) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    events.append(json.loads(line))
+    else:
+        events = list(source)
+    return sorted(events, key=lambda e: e.get("ts", 0.0))
+
+
+def spans(events: Iterable[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Complete spans only (ph == "X"), in ts order."""
+    return sorted((e for e in events if e.get("ph") == "X"),
+                  key=lambda e: (e["ts"], -e.get("dur", 0.0)))
+
+
+def _self_times(sps: List[Dict[str, Any]]) -> List[float]:
+    """Per-span self time: duration minus enclosed child spans.
+
+    Single-threaded traces nest strictly (a child's interval lies inside
+    its parent's), so an interval stack recovers the tree without
+    trusting the recorded depth."""
+    child = [0.0] * len(sps)
+    stack: List[int] = []                  # indices of currently-open spans
+    for i, s in enumerate(sps):
+        end = s["ts"] + s["dur"]
+        while stack and sps[stack[-1]]["ts"] + sps[stack[-1]]["dur"] \
+                <= s["ts"] + 1e-9:
+            stack.pop()
+        if stack:
+            child[stack[-1]] += s["dur"]
+        stack.append(i)
+        del end
+    return [max(s["dur"] - c, 0.0) for s, c in zip(sps, child)]
+
+
+def attribute(events: TraceLike,
+              wall_us: Optional[float] = None) -> Dict[str, Any]:
+    """Wall-time attribution: self time by span name/category + coverage.
+
+    ``wall_us`` is the window to measure coverage against; when omitted
+    it is the observed event window (first ts to last ts+dur). Coverage
+    counts TOP-LEVEL spans only (depth 0): nested spans are already
+    inside their parents' intervals."""
+    events = load_trace(events)
+    sps = spans(events)
+    if not sps:
+        return {"wall_us": float(wall_us or 0.0), "covered_us": 0.0,
+                "coverage": 0.0, "by_name": {}, "by_cat": {}, "spans": 0}
+    selfs = _self_times(sps)
+    by_name: Dict[str, float] = {}
+    by_cat: Dict[str, float] = {}
+    for s, st in zip(sps, selfs):
+        by_name[s["name"]] = by_name.get(s["name"], 0.0) + st
+        by_cat[s["cat"]] = by_cat.get(s["cat"], 0.0) + st
+    covered = sum(s["dur"] for s in sps if s.get("depth", 0) == 0)
+    if wall_us is None:
+        t0 = min(e["ts"] for e in events)
+        t1 = max(e["ts"] + e.get("dur", 0.0) for e in events)
+        wall_us = max(t1 - t0, 1e-9)
+    return {"wall_us": float(wall_us), "covered_us": float(covered),
+            "coverage": float(covered / max(wall_us, 1e-9)),
+            "by_name": by_name, "by_cat": by_cat, "spans": len(sps)}
+
+
+def step_timeline(events: TraceLike) -> List[Dict[str, Any]]:
+    """Per-step reconstruction of the engine loop.
+
+    Returns one record per ``step`` span, in step order::
+
+        {"step": k, "ts": ..., "dur": ..., "phases": {"decode": us, ...},
+         "events": [nested span/instant dicts]}
+
+    The step index comes from the span's recorded args (the engines
+    stamp ``step=self.step_count``)."""
+    events = load_trace(events)
+    steps = [e for e in spans(events) if e["name"] == "step"]
+    out = []
+    for s in steps:
+        lo, hi = s["ts"], s["ts"] + s["dur"]
+        inner = [e for e in events
+                 if lo - 1e-9 <= e["ts"] and e["ts"] + e.get("dur", 0.0)
+                 <= hi + 1e-9 and e is not s and e.get("ph") != "C"]
+        phases: Dict[str, float] = {}
+        for e in inner:
+            if e.get("ph") == "X":
+                phases[e["name"]] = phases.get(e["name"], 0.0) + e["dur"]
+        out.append({"step": s["args"].get("step"), "ts": s["ts"],
+                    "dur": s["dur"], "phases": phases, "events": inner})
+    out.sort(key=lambda r: (r["step"] is None, r["step"], r["ts"]))
+    return out
+
+
+def critical_path(events: TraceLike, top: int = 10) -> List[Dict[str, Any]]:
+    """Phases ranked by total self time — the serial loop's critical path."""
+    att = attribute(events)
+    ranked = sorted(att["by_name"].items(), key=lambda kv: -kv[1])
+    total = sum(att["by_name"].values()) or 1.0
+    return [{"name": n, "self_us": v, "frac": v / total}
+            for n, v in ranked[:top]]
+
+
+def what_if(events: TraceLike, *, overlap: Sequence[str] = (),
+            under: str = "decode",
+            scale: Optional[Dict[str, float]] = None,
+            wall_us: Optional[float] = None) -> Dict[str, float]:
+    """Replay the trace under a hypothesis.
+
+    ``overlap`` names phases assumed to run concurrently with the
+    ``under`` phase (async dispatch): their self time is hidden up to
+    the ``under`` phase's own (scaled) self time — you cannot hide 40ms
+    of uploads under 10ms of decode. ``scale`` multiplies named phases'
+    self times (e.g. ``{"decode": 0.5}`` = a 2x faster decode step).
+    Uncovered wall (host time outside any span) is carried through
+    unchanged. Returns ``{"baseline_us", "replayed_us", "saved_us",
+    "hidden_us", "speedup"}``."""
+    events = load_trace(events)
+    sps = spans(events)
+    selfs = _self_times(sps)
+    scale = scale or {}
+    by_name: Dict[str, float] = {}
+    for s, st in zip(sps, selfs):
+        by_name[s["name"]] = by_name.get(s["name"], 0.0) + st
+    att = attribute(events, wall_us=wall_us)
+    baseline = att["wall_us"]
+    uncovered = max(baseline - sum(by_name.values()), 0.0)
+    scaled = {n: v * float(scale.get(n, 1.0)) for n, v in by_name.items()}
+    over = sum(v for n, v in scaled.items() if n in set(overlap))
+    budget = scaled.get(under, 0.0)
+    hidden = min(over, budget)
+    replayed = sum(scaled.values()) - hidden + uncovered
+    return {"baseline_us": float(baseline), "replayed_us": float(replayed),
+            "saved_us": float(baseline - replayed), "hidden_us": float(hidden),
+            "speedup": float(baseline / max(replayed, 1e-9))}
+
+
+# ---------------------------------------------------------------------------
+# Joining traces with analysis/hlo.py cost extraction
+# ---------------------------------------------------------------------------
+
+def modelled_us(cost: Dict[str, float], hw: Optional[HW] = None) -> float:
+    """Roofline time (microseconds) for one execution of a program whose
+    HLO cost dict (``analysis.hlo.program_cost`` / ``cost_summary``)
+    is ``cost``: max of the compute and memory terms."""
+    hw = hw or HW()
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes_accessed", 0.0))
+    return max(flops / hw.peak_flops, nbytes / hw.hbm_bw) * 1e6
+
+
+def join_costs(events: TraceLike, costs: Dict[str, Dict[str, float]],
+               hw: Optional[HW] = None) -> Dict[str, Dict[str, float]]:
+    """Per-phase measured vs modelled time.
+
+    ``costs`` maps a span name (e.g. ``"decode"``) to the HLO cost dict
+    of the program that span launches. Returns, per phase::
+
+        {"count", "measured_us_total", "measured_us_mean",
+         "model_us", "ratio"}       # ratio >> 1: host/dispatch-bound
+
+    The per-op timeline: multiply a phase's model_us by its count to get
+    the device-time floor for the whole run; the gap to measured self
+    time is host overhead the what-if replay can target."""
+    events = load_trace(events)
+    sps = spans(events)
+    selfs = _self_times(sps)
+    agg: Dict[str, List[float]] = {}
+    for s, st in zip(sps, selfs):
+        agg.setdefault(s["name"], []).append(st)
+    out: Dict[str, Dict[str, float]] = {}
+    for name, cost in costs.items():
+        samples = agg.get(name, [])
+        model = modelled_us(cost, hw)
+        total = sum(samples)
+        mean = total / len(samples) if samples else 0.0
+        out[name] = {"count": float(len(samples)),
+                     "measured_us_total": total,
+                     "measured_us_mean": mean,
+                     "model_us": model,
+                     "ratio": mean / model if model > 0 else float("inf")}
+    return out

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import trace
 from repro.core.adapters import AdapterPack, apply_pack
 
 # A tenant names either the base model (None), one adapter ("a0"), or an
@@ -92,8 +93,10 @@ class SwitchEngine:
     def load(self, pack) -> SwitchStats:
         pack = self._resolve(pack)
         t0 = time.perf_counter()
-        self._apply(pack, +1.0)
-        jax.block_until_ready(jax.tree.leaves(self.params)[0])
+        with trace.span("switch.load", cat="switch", name=pack.name,
+                        bytes=pack.nbytes()):
+            self._apply(pack, +1.0)
+            jax.block_until_ready(jax.tree.leaves(self.params)[0])
         dt = time.perf_counter() - t0
         self.active.append(pack)
         st = SwitchStats(pack.name, dt, pack.num_params(), pack.nbytes(),
@@ -106,8 +109,10 @@ class SwitchEngine:
             return None
         pack = self.active.pop()
         t0 = time.perf_counter()
-        self._apply(pack, -1.0)
-        jax.block_until_ready(jax.tree.leaves(self.params)[0])
+        with trace.span("switch.unload", cat="switch", name=pack.name,
+                        bytes=pack.nbytes()):
+            self._apply(pack, -1.0)
+            jax.block_until_ready(jax.tree.leaves(self.params)[0])
         dt = time.perf_counter() - t0
         st = SwitchStats("-" + pack.name, dt, pack.num_params(),
                          pack.nbytes(), _tree_bytes(self.params))
@@ -267,8 +272,12 @@ class FusedLRU:
                 decision.demote = self.fused
             decision.promote = hot
         if decision.promote:
+            trace.instant("sched.promote", cat="switch",
+                          tenant=tenant_key(decision.promote))
             self.fused = decision.promote
         elif decision.demote:
+            trace.instant("sched.demote", cat="switch",
+                          tenant=tenant_key(decision.demote))
             self.fused = None
         return decision
 

@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import trace
 from repro.core.switching import FusedLRU, Tenant, normalize_tenant
 from repro.models import lm
 from repro.serving.multitenant import MultiTenantEngine
@@ -71,6 +72,7 @@ class ServeFuture:
         self.submitted_step: Optional[int] = None
         self.finished_step: Optional[int] = None
         self.submit_time: Optional[float] = None
+        self.finish_time: Optional[float] = None
         self.ttft: Optional[float] = None     # seconds to first token
         self.first_token_step: Optional[int] = None
         self._done = False
@@ -239,54 +241,63 @@ class ServingEngine(_EngineCommon):
     def _finish(self, slot: int) -> None:
         p = self._active[slot]
         p.fut.finished_step = self.step_count
+        p.fut.finish_time = time.perf_counter()
         p.fut._done = True
         self._active[slot] = None
         self._pos[slot] = 0
         self._last[slot] = 0
 
     def _admit(self, slot: int, p: _Pending) -> None:
-        names: List[Tenant] = [p.fut.adapter]
-        ids = self.engine.ids_for(names)
-        wp = self.engine.wrapped_params(ids)
-        logits, c1 = self.engine._prefill(wp, self._batch_for(p.prompt),
-                                          self.cache_size)
-        self.caches = [_slot_insert(big, small, slot, ax) for big, small, ax
-                       in zip(self.caches, c1, self._axes)]
-        prefix = (self.cfg.num_prefix_embeds
-                  if self.cfg.modality == "vision" else 0)
-        self._active[slot] = p
-        p.fut.submitted_step = self.step_count
-        self._pos[slot] = p.prompt.shape[0] + prefix
-        first = int(np.argmax(np.asarray(logits[0])))
-        self._emit(slot, first)
+        with trace.span("admit", rid=p.fut.rid, slot=slot,
+                        prompt=int(p.prompt.shape[0])):
+            names: List[Tenant] = [p.fut.adapter]
+            ids = self.engine.ids_for(names)
+            wp = self.engine.wrapped_params(ids)
+            logits, c1 = self.engine._prefill(wp, self._batch_for(p.prompt),
+                                              self.cache_size)
+            self.caches = [_slot_insert(big, small, slot, ax)
+                           for big, small, ax
+                           in zip(self.caches, c1, self._axes)]
+            prefix = (self.cfg.num_prefix_embeds
+                      if self.cfg.modality == "vision" else 0)
+            self._active[slot] = p
+            p.fut.submitted_step = self.step_count
+            self._pos[slot] = p.prompt.shape[0] + prefix
+            first = int(np.argmax(np.asarray(logits[0])))
+            self._emit(slot, first)
 
     def step(self) -> bool:
         """Admit queued requests into free slots, then run one decode step
         over every occupied lane. Returns False when fully drained."""
-        for slot in range(self.slots):
-            if self._active[slot] is None and self._queue:
-                self._admit(slot, self._queue.popleft())
-        live = [s for s in range(self.slots) if self._active[s] is not None]
-        if not live:
-            return bool(self._queue)
-        self.step_count += 1
-        self.decode_slot_waste += self.slots - len(live)
-        names = [self._active[s].fut.adapter
-                 if self._active[s] is not None else None
-                 for s in range(self.slots)]
-        # the scheduler sees only live lanes: idle slots are not base-model
-        # traffic, and counting them would dilute every tenant's share
-        self.engine.schedule([names[s] for s in live])
-        ids = self.engine.ids_for(names)
-        wp = self.engine.wrapped_params(ids)
-        toks = jnp.asarray(self._last[:, None])
-        logits, self.caches = self.engine._decode(
-            wp, toks, self.caches, jnp.asarray(self._pos))
-        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
-        for s in live:
-            self._pos[s] += 1          # this step's KV landed at _pos[s]
-            self._emit(s, int(nxt[s]))
-        return True
+        with trace.span("step", engine="lane") as sp:
+            for slot in range(self.slots):
+                if self._active[slot] is None and self._queue:
+                    self._admit(slot, self._queue.popleft())
+            live = [s for s in range(self.slots)
+                    if self._active[s] is not None]
+            if not live:
+                return bool(self._queue)
+            self.step_count += 1
+            sp.set(step=self.step_count, live=len(live))
+            self.decode_slot_waste += self.slots - len(live)
+            names = [self._active[s].fut.adapter
+                     if self._active[s] is not None else None
+                     for s in range(self.slots)]
+            # the scheduler sees only live lanes: idle slots are not
+            # base-model traffic, and counting them would dilute every
+            # tenant's share
+            self.engine.schedule([names[s] for s in live])
+            with trace.span("decode", live=len(live)):
+                ids = self.engine.ids_for(names)
+                wp = self.engine.wrapped_params(ids)
+                toks = jnp.asarray(self._last[:, None])
+                logits, self.caches = self.engine._decode(
+                    wp, toks, self.caches, jnp.asarray(self._pos))
+                nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+            for s in live:
+                self._pos[s] += 1      # this step's KV landed at _pos[s]
+                self._emit(s, int(nxt[s]))
+            return True
 
 
 # ---------------------------------------------------------------------------
@@ -412,25 +423,30 @@ class PagedServingEngine(_EngineCommon):
         copy). Takes no pages on failure."""
         p = self.page_size
         L_ = r.prompt.shape[0]
-        shared_len, shared = self.pool.match_prefix(
-            r.prompt, salt=_prefix_salt(r.fut.adapter))
-        cow = int(shared_len < len(shared) * p)
-        cow += int(r.need > L_ and L_ % p != 0)
-        n_owned = r.nblk - len(shared)
-        if not self.pool.can_alloc(n_owned + cow):
-            self.pool.release(shared)
-            return False
-        fresh = self.pool.alloc(n_owned + cow)
-        owned, r.reserve = fresh[:n_owned], fresh[n_owned:]
-        row = list(shared) + owned
-        r.pages = list(row)
-        self._bt[slot, :] = 0
-        self._bt[slot, :len(row)] = row
-        r.state = "prefill"
-        r.done = shared_len
-        self._active[slot] = r
-        r.fut.submitted_step = self.step_count
-        return True
+        with trace.span("admit", rid=r.fut.rid, slot=slot,
+                        prompt=int(L_)) as sp:
+            shared_len, shared = self.pool.match_prefix(
+                r.prompt, salt=_prefix_salt(r.fut.adapter))
+            cow = int(shared_len < len(shared) * p)
+            cow += int(r.need > L_ and L_ % p != 0)
+            n_owned = r.nblk - len(shared)
+            if not self.pool.can_alloc(n_owned + cow):
+                self.pool.release(shared)
+                sp.set(admitted=False)
+                return False
+            fresh = self.pool.alloc(n_owned + cow)
+            owned, r.reserve = fresh[:n_owned], fresh[n_owned:]
+            row = list(shared) + owned
+            r.pages = list(row)
+            self._bt[slot, :] = 0
+            self._bt[slot, :len(row)] = row
+            r.state = "prefill"
+            r.done = shared_len
+            self._active[slot] = r
+            r.fut.submitted_step = self.step_count
+            sp.set(admitted=True, shared_len=int(shared_len),
+                   pages=len(row), reserve=len(r.reserve))
+            return True
 
     def _ensure_writable(self, slot: int, lo: int, hi: int) -> None:
         """COW every shared page under write range [lo, hi)."""
@@ -441,7 +457,9 @@ class PagedServingEngine(_EngineCommon):
             if not self.pool.is_shared(pg):
                 continue
             dst = r.reserve.pop() if r.reserve else self.pool.alloc(1)[0]
-            self.caches = self._copy(self.caches, pg, dst)
+            with trace.span("cow_copy", cat="pages", slot=slot,
+                            src=pg, dst=int(dst)):
+                self.caches = self._copy(self.caches, pg, dst)
             self._bt[slot, blk] = dst
             r.pages[r.pages.index(pg)] = dst
             self.pool.release([pg])
@@ -450,6 +468,7 @@ class PagedServingEngine(_EngineCommon):
     def _finish(self, slot: int) -> None:
         r = self._active[slot]
         r.fut.finished_step = self.step_count
+        r.fut.finish_time = time.perf_counter()
         r.fut._done = True
         self.pool.release(r.pages + r.reserve)
         r.pages, r.reserve = [], []
@@ -464,15 +483,16 @@ class PagedServingEngine(_EngineCommon):
         L_ = r.prompt.shape[0]
         lo = r.done
         hi = min(L_, lo + self.chunk_size)
-        self._ensure_writable(slot, lo, hi)
-        toks = np.zeros((1, self.chunk_size), np.int32)
-        toks[0, :hi - lo] = r.prompt[lo:hi]
-        ids = self.engine.ids_for([r.fut.adapter])
-        wp = self.engine.wrapped_params(ids)
-        logits, self.caches = self._prefill_chunk(
-            wp, jnp.asarray(toks), self.caches,
-            jnp.asarray(self._bt[slot:slot + 1]),
-            jnp.int32(lo), jnp.int32(hi - lo))
+        with trace.span("prefill_chunk", slot=slot, lo=int(lo), hi=int(hi)):
+            self._ensure_writable(slot, lo, hi)
+            toks = np.zeros((1, self.chunk_size), np.int32)
+            toks[0, :hi - lo] = r.prompt[lo:hi]
+            ids = self.engine.ids_for([r.fut.adapter])
+            wp = self.engine.wrapped_params(ids)
+            logits, self.caches = self._prefill_chunk(
+                wp, jnp.asarray(toks), self.caches,
+                jnp.asarray(self._bt[slot:slot + 1]),
+                jnp.int32(lo), jnp.int32(hi - lo))
         r.done = hi
         self.prefill_chunks += 1
         if hi == L_:
@@ -493,52 +513,62 @@ class PagedServingEngine(_EngineCommon):
     def step(self) -> bool:
         """FIFO-admit while pages last, run ONE prefill chunk, then one
         decode step over every live lane. Returns False when drained."""
-        for slot in range(self.slots):
-            if self._active[slot] is None and self._queue:
-                if not self._try_admit(slot, self._queue[0]):
-                    break
-                self._queue.popleft()
-        pf = [s for s in range(self.slots) if self._active[s] is not None
-              and self._active[s].state == "prefill"]
-        live = [s for s in range(self.slots) if self._active[s] is not None
-                and self._active[s].state == "live"]
-        self.peak_resident = max(self.peak_resident, len(pf) + len(live))
-        self.peak_used_pages = max(self.peak_used_pages,
-                                   self.pool.used_pages())
-        # working set = distinct pages pinned by admitted requests (block
-        # tables, shared prefixes counted once, COW reserves). Registry-only
-        # pages are excluded: they are an LRU cache, reclaimable on demand.
-        ws = set()
-        for s in pf + live:
-            ws.update(int(x) for x in self._bt[s] if x)
-            ws.update(self._active[s].reserve)
-        self.peak_ws_pages = max(self.peak_ws_pages, len(ws))
-        if not pf and not live:
-            return bool(self._queue)
-        self.step_count += 1
-        if pf:
-            self._prefill_step(pf[0])
-        if live:
-            self.decode_slot_waste += self.slots - len(live)
-            live_set = set(live)
-            names = [self._active[s].fut.adapter if s in live_set else None
-                     for s in range(self.slots)]
-            self.engine.schedule([names[s] for s in live])
-            ids = self.engine.ids_for(names)
-            wp = self.engine.wrapped_params(ids)
-            for s in live:
-                self._ensure_writable(s, int(self._pos[s]),
-                                      int(self._pos[s]) + 1)
-            # idle / still-prefilling lanes decode against the scratch page
-            mask = np.zeros((self.slots,), bool)
-            mask[live] = True
-            bt = np.where(mask[:, None], self._bt, 0)
-            pos = np.where(mask, self._pos, 0)
-            logits, self.caches = self._decode(
-                wp, jnp.asarray(self._last[:, None]), self.caches,
-                jnp.asarray(pos), jnp.asarray(bt))
-            nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
-            for s in live:
-                self._pos[s] += 1      # this step's KV landed at _pos[s]
-                self._emit(s, int(nxt[s]))
-        return True
+        with trace.span("step", engine="paged") as sp:
+            for slot in range(self.slots):
+                if self._active[slot] is None and self._queue:
+                    if not self._try_admit(slot, self._queue[0]):
+                        break
+                    self._queue.popleft()
+            pf = [s for s in range(self.slots) if self._active[s] is not None
+                  and self._active[s].state == "prefill"]
+            live = [s for s in range(self.slots)
+                    if self._active[s] is not None
+                    and self._active[s].state == "live"]
+            self.peak_resident = max(self.peak_resident, len(pf) + len(live))
+            self.peak_used_pages = max(self.peak_used_pages,
+                                       self.pool.used_pages())
+            # working set = distinct pages pinned by admitted requests
+            # (block tables, shared prefixes counted once, COW reserves).
+            # Registry-only pages are excluded: they are an LRU cache,
+            # reclaimable on demand.
+            ws = set()
+            for s in pf + live:
+                ws.update(int(x) for x in self._bt[s] if x)
+                ws.update(self._active[s].reserve)
+            self.peak_ws_pages = max(self.peak_ws_pages, len(ws))
+            if not pf and not live:
+                return bool(self._queue)
+            self.step_count += 1
+            sp.set(step=self.step_count, prefill=len(pf), live=len(live))
+            trace.counter("free_pages", self.pool.free_pages(),
+                          cat="pages")
+            trace.counter("resident", len(pf) + len(live))
+            if pf:
+                self._prefill_step(pf[0])
+            if live:
+                self.decode_slot_waste += self.slots - len(live)
+                live_set = set(live)
+                names = [self._active[s].fut.adapter
+                         if s in live_set else None
+                         for s in range(self.slots)]
+                self.engine.schedule([names[s] for s in live])
+                with trace.span("decode", live=len(live)):
+                    ids = self.engine.ids_for(names)
+                    wp = self.engine.wrapped_params(ids)
+                    for s in live:
+                        self._ensure_writable(s, int(self._pos[s]),
+                                              int(self._pos[s]) + 1)
+                    # idle / still-prefilling lanes decode against the
+                    # scratch page
+                    mask = np.zeros((self.slots,), bool)
+                    mask[live] = True
+                    bt = np.where(mask[:, None], self._bt, 0)
+                    pos = np.where(mask, self._pos, 0)
+                    logits, self.caches = self._decode(
+                        wp, jnp.asarray(self._last[:, None]), self.caches,
+                        jnp.asarray(pos), jnp.asarray(bt))
+                    nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+                for s in live:
+                    self._pos[s] += 1  # this step's KV landed at _pos[s]
+                    self._emit(s, int(nxt[s]))
+            return True

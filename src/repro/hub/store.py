@@ -28,6 +28,7 @@ import os
 from collections import OrderedDict
 from typing import Dict, List, Optional, Union  # noqa: F401 (Union: annot.)
 
+from repro.analysis import trace
 from repro.core.adapters import AdapterPack
 from repro.hub.packio import (QuantPack, load_pack, peek_pack,
                               quantize_pack, save_pack)
@@ -112,7 +113,9 @@ class AdapterStore:
         if form is None:
             path = self._paths[name]
             assert path is not None, f"in-memory pack {name!r} lost"
-            form = load_pack(path, dequantize=False)
+            with trace.span("disk_load", cat="store", name=name) as sp:
+                form = load_pack(path, dequantize=False)
+                sp.set(bytes=form.nbytes())
             self.loads += 1
             self._admit(name, form)
         else:
@@ -142,6 +145,7 @@ class AdapterStore:
                 break            # only the newcomer/pinned left: keep it
             del self._resident[victim]
             self.evictions += 1
+            trace.instant("store.evict", cat="store", name=victim)
 
     def evict(self, name: str) -> bool:
         """Drop a resident form explicitly (the file stays registered)."""

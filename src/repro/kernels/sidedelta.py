@@ -57,7 +57,7 @@ matches the sequential switch-per-batch path to fp32 accuracy.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +73,63 @@ _LANE = 128          # TPU lane width: last-dim tile granularity
 
 def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# Autotuned plan cache. ``analysis/autotune.py`` sweeps (bm, kc) candidates
+# per (S, n, m, K) shape class against measured step times and installs the
+# winners here; ``plan_tiles`` consults the cache before falling back to the
+# static VMEM-budget heuristic. Cached plans are validated on lookup (tile
+# alignment AND the budget bound) so a stale or hand-edited cache can never
+# produce an over-budget or misaligned kernel — it just misses.
+# ---------------------------------------------------------------------------
+
+PlanKey = Tuple[int, int, int, int, int, int]     # S, n, m, K, budget, isize
+
+_PLAN_CACHE: Dict[PlanKey, Tuple[int, int]] = {}
+plan_cache_stats = {"hits": 0, "misses": 0, "rejected": 0}
+
+
+def plan_cache_key(S: int, n: int, m: int, K: int,
+                   vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                   x_itemsize: int = 4) -> PlanKey:
+    """One shape class = one cache entry; the budget and input itemsize are
+    part of the class (they change the feasible plan set)."""
+    return (int(S), int(n), int(m), int(K), int(vmem_budget), int(x_itemsize))
+
+
+def plan_is_valid(S: int, n: int, m: int, K: int, bm: int, kc: int,
+                  *, vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                  x_itemsize: int = 4) -> bool:
+    """A usable (bm, kc): lane-aligned, positive, and within the budget
+    (best-effort like ``plan_tiles``: the minimum plan is always valid)."""
+    if bm < _LANE or kc < _LANE or bm % _LANE or kc % _LANE:
+        return False
+    if bm == _LANE and kc == _LANE:
+        return True                  # the floor plan_tiles itself falls to
+    return vmem_estimate(S, n, m, K, bm, kc,
+                         x_itemsize=x_itemsize) <= vmem_budget
+
+
+def install_plan_cache(plans: Dict[PlanKey, Tuple[int, int]],
+                       replace: bool = False) -> int:
+    """Merge autotuned plans into the cache; returns entries installed."""
+    global _PLAN_CACHE
+    if replace:
+        _PLAN_CACHE = {}
+    for key, (bm, kc) in plans.items():
+        _PLAN_CACHE[tuple(int(x) for x in key)] = (int(bm), int(kc))
+    return len(_PLAN_CACHE)
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    for k in plan_cache_stats:
+        plan_cache_stats[k] = 0
+
+
+def plan_cache() -> Dict[PlanKey, Tuple[int, int]]:
+    return dict(_PLAN_CACHE)
 
 
 def vmem_estimate(S: int, n: int, m: int, K: int, bm: int, kc: int,
@@ -99,18 +156,36 @@ def plan_tiles(S: int, n: int, m: int, K: int,
     scratch, the tables) are paid regardless; the free variables trade the
     one-hot buffers against the budget remainder. Best-effort: if even the
     minimum (128, 128) plan exceeds the budget the minimum is returned —
-    the caller wanted a kernel, not an exception."""
+    the caller wanted a kernel, not an exception.
+
+    An autotuned plan cache (``install_plan_cache``, populated by
+    ``analysis/autotune.py`` from measured step times) is consulted first;
+    invalid cached plans are rejected, never trusted."""
+    cached = _PLAN_CACHE.get(plan_cache_key(S, n, m, K, vmem_budget,
+                                            x_itemsize))
+    if cached is not None:
+        bm_c, kc_c = cached
+        if plan_is_valid(S, n, m, K, bm_c, kc_c, vmem_budget=vmem_budget,
+                         x_itemsize=x_itemsize):
+            plan_cache_stats["hits"] += 1
+            return int(bm_c), int(kc_c)
+        plan_cache_stats["rejected"] += 1
+    plan_cache_stats["misses"] += 1
     m_pad = _round_up(max(m, 1), _LANE)
     K_pad = _round_up(max(K, 1), _LANE)
     kc = min(K_pad, 512)
-    fixed = S * n * x_itemsize + S * K_pad * 4 + K_pad * 12 + n * kc * 4
-    room = max(vmem_budget - fixed, 0)
-    # per-bm cost: out block (S rows) + scatter one-hot (kc rows), f32
-    bm = (room // ((S + kc) * 4)) // _LANE * _LANE
-    bm = max(min(bm, m_pad), _LANE)
-    while bm > _LANE and m_pad % bm:
-        bm -= _LANE                 # keep the grid exact: bm | padded m
-    return int(bm), int(kc)
+    while True:
+        fixed = S * n * x_itemsize + S * K_pad * 4 + K_pad * 12 + n * kc * 4
+        room = max(vmem_budget - fixed, 0)
+        # per-bm cost: out block (S rows) + scatter one-hot (kc rows), f32
+        bm = (room // ((S + kc) * 4)) // _LANE * _LANE
+        bm = max(min(bm, m_pad), _LANE)
+        while bm > _LANE and m_pad % bm:
+            bm -= _LANE             # keep the grid exact: bm | padded m
+        if kc <= _LANE or vmem_estimate(S, n, m, K, bm, kc,
+                                        x_itemsize=x_itemsize) <= vmem_budget:
+            return int(bm), int(kc)
+        kc -= _LANE                 # fixed costs too big: smaller K chunk
 
 
 # ---------------------------------------------------------------------------

@@ -3,4 +3,5 @@ from repro.serving.kvcache import (PagePool, QuantKV, cache_bytes,  # noqa: F401
                                    paged_write, pages_for, pool_zeros,
                                    quant_cache_zeros, quantize_kv,
                                    update_quant_cache)
+from repro.serving.loadgen import GenRequest, LoadGen, LoadReport, Phase  # noqa: F401
 from repro.serving.multitenant import MultiTenantEngine  # noqa: F401

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import trace
 from repro.core.adapters import AdapterPack, apply_pack
 from repro.core.fusion import fuse_packs
 from repro.core.switching import (FusedLRU, SwitchEngine, Tenant,
@@ -289,6 +290,10 @@ class MultiTenantEngine:
 
     def _rebuild(self) -> None:
         from repro.kernels.ops import quantize_table
+        with trace.span("table_rebuild", cat="tables") as _sp:
+            self._rebuild_impl(quantize_table, _sp)
+
+    def _rebuild_impl(self, quantize_table, _sp) -> None:
         side = self._side_packs()
         order = sorted(side, key=lambda t: t if isinstance(t, str)
                        else tenant_key(t))
@@ -347,6 +352,9 @@ class MultiTenantEngine:
             tables[path] = entry
         self._tables = tables
         self._dirty = False
+        _sp.set(tenants=len(side), paths=len(tables),
+                bytes=sum(int(x.nbytes) for t in tables.values()
+                          for x in t.values()))
 
     def table_nbytes(self) -> Dict[str, int]:
         """Device-side adapter-table bytes by component (what multi-tenant
@@ -369,8 +377,11 @@ class MultiTenantEngine:
     def _demote(self) -> None:
         if self.fused is None:
             return
-        for m in tenant_members(self.fused):
-            self.shared = apply_pack(self.shared, self.packs[m], sign=-1.0)
+        with trace.span("unfuse", cat="switch",
+                        tenant=tenant_key(self.fused)):
+            for m in tenant_members(self.fused):
+                self.shared = apply_pack(self.shared, self.packs[m],
+                                         sign=-1.0)
         self.fused = None
         self.fuse_transitions += 1
         self._dirty = True
@@ -380,8 +391,10 @@ class MultiTenantEngine:
         if tenant == self.fused or tenant is None:
             return
         self._demote()
-        for m in tenant_members(tenant):
-            self.shared = apply_pack(self.shared, self.packs[m], sign=+1.0)
+        with trace.span("fuse", cat="switch", tenant=tenant_key(tenant)):
+            for m in tenant_members(tenant):
+                self.shared = apply_pack(self.shared, self.packs[m],
+                                         sign=+1.0)
         self.fused = tenant
         self.fuse_transitions += 1
         self._dirty = True

@@ -115,6 +115,75 @@ def test_checked_in_baseline_is_valid():
                 assert isinstance(ceil, (int, float)) and ceil > 0
 
 
+def test_percentile_matches_numpy():
+    """The shared helper must agree with np.percentile's default linear
+    interpolation — every latency lane quotes this math."""
+    np = pytest.importorskip("numpy")
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 5, 100):
+        xs = list(rng.exponential(10.0, n))
+        for p in (0, 50, 95, 99, 100):
+            assert emit.percentile(xs, p) == pytest.approx(
+                float(np.percentile(xs, p)), rel=1e-12)
+    with pytest.raises(ValueError):
+        emit.percentile([], 50)
+
+
+def test_percentiles_metric_fragment():
+    d = emit.percentiles([1.0, 2.0, 3.0], (50, 99), "ttft_ms", "_paged")
+    assert set(d) == {"p50_ttft_ms_paged", "p99_ttft_ms_paged"}
+    assert d["p50_ttft_ms_paged"] == 2.0
+
+
+def test_compare_accepts_schema_v1():
+    """Old checked-in v1 artifacts must stay comparable under schema v2."""
+    base = {"multi_tenant": {"gate": {"tokens_per_s_batched": 1.0}}}
+    v1 = dict(_result(tokens_per_s_batched=9.0), schema=1)
+    assert emit.compare(v1, base) == []
+    assert 1 in emit.COMPAT_SCHEMAS and 2 in emit.COMPAT_SCHEMAS
+
+
+def test_cli_trips_on_missing_gated_metric(tmp_path):
+    """End to end: a run that silently DROPS a gated metric (bench edited,
+    metric renamed) must exit 1 with a FAIL row, not print ok."""
+    run = tmp_path / "BENCH_multi_tenant.json"
+    emit.emit(_result(speedup=2.0), str(run))      # gated metric absent
+    base = tmp_path / "baseline.json"
+    json.dump({"multi_tenant": {"gate": {"tokens_per_s_batched": 1.0}}},
+              open(base, "w"))
+    cli = os.path.join(BENCH_DIR, "check_regression.py")
+    r = subprocess.run([sys.executable, cli, str(run),
+                        "--baseline", str(base)],
+                       capture_output=True, text=True)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "[FAIL] multi_tenant.tokens_per_s_batched: missing" in r.stdout
+    assert "REGRESSION GATE TRIPPED" in r.stdout
+
+
+def test_cli_trips_on_uncovered_baseline_bench(tmp_path):
+    """A baseline bench with gates whose BENCH file is never passed must
+    trip — deleting an artifact must not silently un-gate its metrics."""
+    run = tmp_path / "BENCH_multi_tenant.json"
+    emit.emit(_result(tokens_per_s_batched=9.0), str(run))
+    base = tmp_path / "baseline.json"
+    json.dump({"_comment": "strings are skipped",
+               "multi_tenant": {"gate": {"tokens_per_s_batched": 1.0}},
+               "slo_load": {"gate_max": {"p99_latency_ms": 100.0}}},
+              open(base, "w"))
+    cli = os.path.join(BENCH_DIR, "check_regression.py")
+    r = subprocess.run([sys.executable, cli, str(run),
+                        "--baseline", str(base)],
+                       capture_output=True, text=True)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "no run file" in r.stdout
+    # an intentionally-absent lane is opted out explicitly
+    r = subprocess.run([sys.executable, cli, str(run),
+                        "--baseline", str(base),
+                        "--allow-missing", "slo_load"],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
 def test_gate_trips_on_doctored_baseline(tmp_path):
     """End to end through the real CLI: a baseline demanding impossible
     throughput must exit nonzero; the honest baseline must pass."""
