@@ -56,7 +56,9 @@ GATED_METRICS = {
                             "resident_requests_per_gb_paged",
                             "residency_gain_paged"),
     "rapid_switching": ("switches_per_s",),
-    "slo_load": ("tokens_per_s", "goodput_tok_s", "completed"),
+    "slo_load": ("tokens_per_s", "goodput_tok_s", "completed",
+                 "prefetch_hit_rate", "cold_ttft_p99_gain",
+                 "overlap_realized_frac"),
 }
 
 # lower-is-better counterparts (latencies), gateable via "gate_max".
@@ -64,7 +66,8 @@ GATED_MAX_METRICS = {
     "multi_tenant": ("p99_ttft_ms_batched",),
     "continuous_batching": ("p99_ttft_ms_continuous", "p99_ttft_ms_paged"),
     "slo_load": ("p50_latency_ms", "p99_latency_ms", "p99_ttft_ms",
-                 "slo_violation_rate"),
+                 "slo_violation_rate", "p99_ttft_cold_ms",
+                 "prefetch_stall_ms"),
 }
 
 

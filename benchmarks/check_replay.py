@@ -1,0 +1,91 @@
+"""CI trace gate: replay an archived serving trace through the cost model.
+
+  python benchmarks/check_replay.py TRACE_slo_load.jsonl \
+      [--min-coverage 0.9] [--min-realized 0.5] [--allow-no-async]
+
+Two properties of the archived ``TRACE_*.jsonl`` artifact are gated:
+
+  * **coverage** — the serving thread's top-level spans must account for
+    at least ``--min-coverage`` of the observed wall window
+    (``replay.attribute``). A drop means the engine loop grew untraced
+    phases and the replay what-if model is flying blind.
+  * **realized overlap** — ``replay.verify_overlap`` must show at least
+    ``--min-realized`` of the predicted disk-load/table-build hiding
+    actually ran concurrently with decode/prefill/admit. A pipeline
+    that silently serializes (the serving thread blocking on every
+    load) measures ~0 here even when end-to-end numbers hide it in
+    run-to-run noise. Traces with zero worker spans fail outright
+    unless ``--allow-no-async`` (the async pipeline never ran — wrong
+    artifact or the flag got dropped from the bench invocation).
+
+Exit code 1 (with a per-check report) on any violation. See
+``src/repro/analysis/README.md`` for the trace schema.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+from repro.analysis import replay  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("traces", nargs="+", help="TRACE_*.jsonl files to gate")
+    ap.add_argument("--min-coverage", type=float, default=0.9,
+                    help="minimum span coverage of the wall window")
+    ap.add_argument("--min-realized", type=float, default=0.5,
+                    help="minimum realized fraction of predicted hiding")
+    ap.add_argument("--allow-no-async", action="store_true",
+                    help="pass traces with zero worker spans (pre-async "
+                    "artifacts)")
+    args = ap.parse_args()
+
+    failures = []
+    for path in args.traces:
+        events = replay.load_trace(path)
+        att = replay.attribute(events)
+        vo = replay.verify_overlap(events)
+        print(f"{path}: {len(events)} events, {att['spans']} spans")
+        cov_ok = att["coverage"] >= args.min_coverage
+        print(f"  [{'ok' if cov_ok else 'FAIL':>4}] coverage "
+              f"{att['coverage']:.1%} (min {args.min_coverage:.0%})")
+        if not cov_ok:
+            failures.append(f"{path}: coverage {att['coverage']:.1%} < "
+                            f"{args.min_coverage:.0%}")
+        if vo["async_spans"] == 0:
+            status = "ok" if args.allow_no_async else "FAIL"
+            print(f"  [{status:>4}] no worker spans — async pipeline "
+                  "never ran")
+            if not args.allow_no_async:
+                failures.append(f"{path}: no async worker spans (expected "
+                                "the prefetch pipeline; --allow-no-async "
+                                "for pre-async traces)")
+            continue
+        rel_ok = vo["realized_frac"] >= args.min_realized
+        print(f"  [{'ok' if rel_ok else 'FAIL':>4}] overlap: "
+              f"{vo['async_spans']} worker spans, "
+              f"{vo['measured_hidden_us'] / 1e3:.1f} of "
+              f"{vo['predicted_hidden_us'] / 1e3:.1f} ms predicted hiding "
+              f"realized ({vo['realized_frac']:.1%}, min "
+              f"{args.min_realized:.0%})")
+        for name, us in sorted(vo["async_by_name"].items()):
+            print(f"         {name:<16} {us / 1e3:9.2f} ms")
+        if not rel_ok:
+            failures.append(f"{path}: realized overlap "
+                            f"{vo['realized_frac']:.1%} < "
+                            f"{args.min_realized:.0%}")
+    if failures:
+        print("\nREPLAY GATE TRIPPED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nreplay gate: all traces within bounds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,6 +31,21 @@ timeline this module reconstructs and explains:
     ``cost_summary`` dicts): each phase gets a roofline model time
     ``max(flops/peak, bytes/bw)`` and the measured/model ratio — >> 1
     means the phase is host-bound, not device-bound.
+  * ``verify_overlap(events, ...)`` — close the async-prefetch loop:
+    given a trace of the *async* pipeline (worker-thread
+    ``prefetch.disk`` / ``prefetch.h2d`` spans recorded with
+    ``tid != 0``), compare the hiding the serial what-if predicts
+    (async work fully hidden under the serving thread's ``under``
+    phases) against the hiding actually realized (measured temporal
+    intersection of worker spans with the serving thread's ``under``
+    intervals). CI gates ``realized_frac >= 0.5``.
+
+Threads: events carry a ``tid`` (0 = the serving loop, workers 1+;
+missing = 0 for pre-async traces). Self-time interval stacks are built
+per tid — a worker span overlapping a serving-thread span is
+concurrency, not nesting. The serial quantities (coverage, what-if
+replay, critical path) are computed over the serving thread's spans
+only; worker time is reported separately (``attribute()["async_by_name"]``).
 
 All times are microseconds (the tracer's unit).
 """
@@ -66,23 +81,35 @@ def spans(events: Iterable[Dict[str, Any]]) -> List[Dict[str, Any]]:
                   key=lambda e: (e["ts"], -e.get("dur", 0.0)))
 
 
+def span_tid(e: Dict[str, Any]) -> int:
+    """Recording thread of an event; 0 (the serving loop) for traces
+    captured before the tracer recorded tids."""
+    return int(e.get("tid", 0))
+
+
+def main_spans(events: Iterable[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Serving-thread spans only (tid 0), in ts order."""
+    return [s for s in spans(events) if span_tid(s) == 0]
+
+
 def _self_times(sps: List[Dict[str, Any]]) -> List[float]:
     """Per-span self time: duration minus enclosed child spans.
 
-    Single-threaded traces nest strictly (a child's interval lies inside
-    its parent's), so an interval stack recovers the tree without
-    trusting the recorded depth."""
+    Within one thread spans nest strictly (a child's interval lies
+    inside its parent's), so an interval stack recovers the tree without
+    trusting the recorded depth. Stacks are kept per tid: a worker
+    thread's prefetch span overlapping a serving-thread span is
+    concurrency, not parenthood."""
     child = [0.0] * len(sps)
-    stack: List[int] = []                  # indices of currently-open spans
+    stacks: Dict[int, List[int]] = {}      # tid -> open-span indices
     for i, s in enumerate(sps):
-        end = s["ts"] + s["dur"]
+        stack = stacks.setdefault(span_tid(s), [])
         while stack and sps[stack[-1]]["ts"] + sps[stack[-1]]["dur"] \
                 <= s["ts"] + 1e-9:
             stack.pop()
         if stack:
             child[stack[-1]] += s["dur"]
         stack.append(i)
-        del end
     return [max(s["dur"] - c, 0.0) for s, c in zip(sps, child)]
 
 
@@ -92,27 +119,37 @@ def attribute(events: TraceLike,
 
     ``wall_us`` is the window to measure coverage against; when omitted
     it is the observed event window (first ts to last ts+dur). Coverage
-    counts TOP-LEVEL spans only (depth 0): nested spans are already
-    inside their parents' intervals."""
+    counts the serving thread's (tid 0) TOP-LEVEL spans only (depth 0):
+    nested spans are already inside their parents' intervals, and
+    worker-thread spans run concurrently with the wall clock rather
+    than consuming it — their self time is reported separately in
+    ``async_by_name``."""
     events = load_trace(events)
     sps = spans(events)
     if not sps:
         return {"wall_us": float(wall_us or 0.0), "covered_us": 0.0,
-                "coverage": 0.0, "by_name": {}, "by_cat": {}, "spans": 0}
+                "coverage": 0.0, "by_name": {}, "by_cat": {},
+                "async_by_name": {}, "spans": 0}
     selfs = _self_times(sps)
     by_name: Dict[str, float] = {}
     by_cat: Dict[str, float] = {}
+    async_by_name: Dict[str, float] = {}
     for s, st in zip(sps, selfs):
-        by_name[s["name"]] = by_name.get(s["name"], 0.0) + st
-        by_cat[s["cat"]] = by_cat.get(s["cat"], 0.0) + st
-    covered = sum(s["dur"] for s in sps if s.get("depth", 0) == 0)
+        if span_tid(s) == 0:
+            by_name[s["name"]] = by_name.get(s["name"], 0.0) + st
+            by_cat[s["cat"]] = by_cat.get(s["cat"], 0.0) + st
+        else:
+            async_by_name[s["name"]] = async_by_name.get(s["name"], 0.0) + st
+    covered = sum(s["dur"] for s in sps
+                  if s.get("depth", 0) == 0 and span_tid(s) == 0)
     if wall_us is None:
         t0 = min(e["ts"] for e in events)
         t1 = max(e["ts"] + e.get("dur", 0.0) for e in events)
         wall_us = max(t1 - t0, 1e-9)
     return {"wall_us": float(wall_us), "covered_us": float(covered),
             "coverage": float(covered / max(wall_us, 1e-9)),
-            "by_name": by_name, "by_cat": by_cat, "spans": len(sps)}
+            "by_name": by_name, "by_cat": by_cat,
+            "async_by_name": async_by_name, "spans": len(sps)}
 
 
 def step_timeline(events: TraceLike) -> List[Dict[str, Any]]:
@@ -130,9 +167,12 @@ def step_timeline(events: TraceLike) -> List[Dict[str, Any]]:
     out = []
     for s in steps:
         lo, hi = s["ts"], s["ts"] + s["dur"]
+        # a worker-thread prefetch span may fall inside the step's window
+        # temporally, but it is not part of the step's serial work
         inner = [e for e in events
                  if lo - 1e-9 <= e["ts"] and e["ts"] + e.get("dur", 0.0)
-                 <= hi + 1e-9 and e is not s and e.get("ph") != "C"]
+                 <= hi + 1e-9 and e is not s and e.get("ph") != "C"
+                 and span_tid(e) == 0]
         phases: Dict[str, float] = {}
         for e in inner:
             if e.get("ph") == "X":
@@ -164,10 +204,12 @@ def what_if(events: TraceLike, *, overlap: Sequence[str] = (),
     of uploads under 10ms of decode. ``scale`` multiplies named phases'
     self times (e.g. ``{"decode": 0.5}`` = a 2x faster decode step).
     Uncovered wall (host time outside any span) is carried through
-    unchanged. Returns ``{"baseline_us", "replayed_us", "saved_us",
-    "hidden_us", "speedup"}``."""
+    unchanged. The replay is a serial model of the serving thread, so
+    only tid-0 spans participate — worker-thread prefetch spans are
+    already off the critical path. Returns ``{"baseline_us",
+    "replayed_us", "saved_us", "hidden_us", "speedup"}``."""
     events = load_trace(events)
-    sps = spans(events)
+    sps = main_spans(events)
     selfs = _self_times(sps)
     scale = scale or {}
     by_name: Dict[str, float] = {}
@@ -184,6 +226,101 @@ def what_if(events: TraceLike, *, overlap: Sequence[str] = (),
     return {"baseline_us": float(baseline), "replayed_us": float(replayed),
             "saved_us": float(baseline - replayed), "hidden_us": float(hidden),
             "speedup": float(baseline / max(replayed, 1e-9))}
+
+
+def _merge_intervals(ivals: List[List[float]]) -> List[List[float]]:
+    """Union of [lo, hi) intervals, sorted and non-overlapping."""
+    out: List[List[float]] = []
+    for lo, hi in sorted(ivals):
+        if out and lo <= out[-1][1]:
+            out[-1][1] = max(out[-1][1], hi)
+        else:
+            out.append([lo, hi])
+    return out
+
+
+def _intersect_us(lo: float, hi: float,
+                  merged: List[List[float]]) -> float:
+    """Length of [lo, hi) covered by a merged interval list."""
+    got = 0.0
+    for a, b in merged:
+        if b <= lo:
+            continue
+        if a >= hi:
+            break
+        got += min(b, hi) - max(a, lo)
+    return got
+
+
+def verify_overlap(events: TraceLike, *,
+                   async_names: Optional[Sequence[str]] = None,
+                   under: Sequence[str] = ("decode", "prefill_chunk",
+                                           "admit"),
+                   baseline: Optional[TraceLike] = None,
+                   serial_names: Sequence[str] = ("disk_load",
+                                                  "table_rebuild"),
+                   serial_under: str = "decode") -> Dict[str, Any]:
+    """Did the async prefetch pipeline realize the hiding the what-if
+    predicted?
+
+    ``events`` is a trace of the *async* pipeline: adapter disk loads
+    and device-table builds run on worker threads, so their spans
+    (``prefetch.disk``, ``prefetch.h2d``) carry ``tid != 0``.
+
+      * **predicted** hiding is what the serial replay model promises:
+        with ``baseline`` (a pre-change synchronous trace, e.g. the
+        archived ``TRACE_slo_load.sync.jsonl``), it is
+        ``what_if(baseline, overlap=serial_names, under=serial_under)
+        ["hidden_us"]`` — the serial ``disk_load``/``table_rebuild``
+        self time hideable under decode. Without a baseline it is the
+        self-contained bound ``min(async worker time, under budget)``:
+        every microsecond of worker time could have hidden under the
+        serving thread's ``under`` phases.
+      * **measured** hiding is the realized temporal intersection of
+        the worker spans with the serving thread's ``under`` intervals
+        — time the async work actually ran concurrently with decode
+        instead of stalling it.
+
+    ``realized_frac = measured / predicted`` is the contract CI gates
+    (>= 0.5): a pipeline that silently serializes (the serving thread
+    blocking on every load) measures ~0 overlap and trips the gate even
+    though end-to-end numbers may hide it in noise. When there is
+    nothing to hide (``predicted == 0``) the fraction is vacuously 1.0;
+    ``async_spans == 0`` means the pipeline never ran — callers should
+    treat that as its own failure when async serving was expected."""
+    events = load_trace(events)
+    sps = spans(events)
+    selfs = _self_times(sps)
+    under = tuple(under)
+    workers = [(s, st) for s, st in zip(sps, selfs) if span_tid(s) != 0
+               and (async_names is None or s["name"] in set(async_names))]
+    async_by_name: Dict[str, float] = {}
+    for s, st in workers:
+        async_by_name[s["name"]] = async_by_name.get(s["name"], 0.0) + st
+    async_us = sum(async_by_name.values())
+    under_sps = [s for s in sps if span_tid(s) == 0 and s["name"] in under]
+    under_us = sum(st for s, st in zip(sps, selfs)
+                   if span_tid(s) == 0 and s["name"] in under)
+    merged = _merge_intervals([[s["ts"], s["ts"] + s["dur"]]
+                               for s in under_sps])
+    # measured hiding: worker-span *durations* against the under windows
+    # (a worker span's wall time is concurrent whether or not it nests
+    # other worker spans, so full dur — not self — is what overlaps)
+    measured = sum(_intersect_us(s["ts"], s["ts"] + s["dur"], merged)
+                   for s, _ in workers
+                   if s.get("depth", 0) == 0 or span_tid(s) != 0)
+    if baseline is not None:
+        predicted = what_if(load_trace(baseline), overlap=serial_names,
+                            under=serial_under)["hidden_us"]
+    else:
+        predicted = min(async_us, under_us)
+    realized = measured / predicted if predicted > 1e-9 else 1.0
+    return {"async_us": float(async_us), "under_us": float(under_us),
+            "predicted_hidden_us": float(predicted),
+            "measured_hidden_us": float(measured),
+            "realized_frac": float(realized),
+            "async_spans": len(workers),
+            "async_by_name": async_by_name, "under": list(under)}
 
 
 # ---------------------------------------------------------------------------

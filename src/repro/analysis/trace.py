@@ -19,18 +19,28 @@ Enable tracing by installing a tracer::
     tr.to_jsonl("run.trace.jsonl")          # one event per line
     tr.to_chrome("run.trace.json")          # chrome://tracing / Perfetto
 
-Event model (single-threaded host loop — the engines drive everything
-from one Python thread):
+Event model (serving loop on one host thread, plus prefetch workers):
 
   * ``span(name, cat=..., **args)`` — a context manager timing a phase.
     Recorded on exit as ``{"ph": "X", "name", "cat", "ts", "dur",
-    "depth", "args"}`` with ``ts``/``dur`` in microseconds relative to
-    the tracer's epoch. ``depth`` is the nesting level at entry (0 =
-    top level); the object returned by ``__enter__`` supports
-    ``.set(**kw)`` to attach args discovered mid-span.
+    "depth", "tid", "args"}`` with ``ts``/``dur`` in microseconds
+    relative to the tracer's epoch. ``depth`` is the nesting level at
+    entry (0 = top level) *within the recording thread*; the object
+    returned by ``__enter__`` supports ``.set(**kw)`` to attach args
+    discovered mid-span.
   * ``instant(name, **args)`` — a zero-duration marker (``"ph": "i"``).
   * ``counter(name, value)`` — a sampled gauge (``"ph": "C"``), e.g.
     page-pool pressure per step.
+
+Threads: the serving loop stays single-threaded, but the async adapter
+prefetch pipeline (``AdapterStore.prefetch`` disk loads, background
+device-table builds) records spans from worker threads. Every event
+carries a small ``tid``: 0 is the thread that called ``install()`` (the
+serving loop), workers get 1, 2, ... in first-seen order. Span nesting
+(``depth``, and the replay model's interval stacks) is tracked per
+thread, so a worker's ``prefetch.disk`` span overlapping the main
+thread's ``decode`` never corrupts either thread's tree — that overlap
+is exactly what ``replay.verify_overlap`` measures.
 
 The buffer is a bounded ring: when ``capacity`` events have been
 recorded the oldest are dropped (``tracer.dropped`` counts them), so a
@@ -40,6 +50,7 @@ memory.
 from __future__ import annotations
 
 import json
+import threading
 import time
 from collections import deque
 from typing import Any, Dict, List, Optional
@@ -67,7 +78,7 @@ _tracer: Optional["Tracer"] = None
 
 
 class _Span:
-    __slots__ = ("_tr", "name", "cat", "args", "_t0", "_depth")
+    __slots__ = ("_tr", "name", "cat", "args", "_t0", "_depth", "_tid")
 
     def __init__(self, tr: "Tracer", name: str, cat: str, args: dict):
         self._tr = tr
@@ -82,19 +93,20 @@ class _Span:
 
     def __enter__(self):
         tr = self._tr
-        self._depth = tr._depth
-        tr._depth += 1
+        self._tid = tr._tid()
+        self._depth = tr._enter_depth()
         self._t0 = time.perf_counter()
         return self
 
     def __exit__(self, *exc):
         t1 = time.perf_counter()
         tr = self._tr
-        tr._depth -= 1
+        tr._exit_depth()
         tr._push({"ph": "X", "name": self.name, "cat": self.cat,
                   "ts": (self._t0 - tr.epoch) * 1e6,
                   "dur": (t1 - self._t0) * 1e6,
-                  "depth": self._depth, "args": self.args})
+                  "depth": self._depth, "tid": self._tid,
+                  "args": self.args})
         return False
 
 
@@ -107,16 +119,40 @@ class Tracer:
         self.capacity = capacity
         self.epoch = time.perf_counter()
         self._buf: "deque[Dict[str, Any]]" = deque()
-        self._depth = 0
         self.dropped = 0
+        # per-thread small tids (0 = the installing/serving thread; workers
+        # get 1, 2, ... first-seen) and per-thread nesting depth — prefetch
+        # workers record concurrently with the serving loop
+        self._lock = threading.Lock()
+        self._tids: Dict[int, int] = {threading.get_ident(): 0}
+        self._depths: Dict[int, int] = {}
 
     # -- recording -----------------------------------------------------
 
+    def _tid(self) -> int:
+        ident = threading.get_ident()
+        tid = self._tids.get(ident)
+        if tid is None:
+            with self._lock:
+                tid = self._tids.setdefault(ident, len(self._tids))
+        return tid
+
+    def _enter_depth(self) -> int:
+        ident = threading.get_ident()
+        d = self._depths.get(ident, 0)
+        self._depths[ident] = d + 1
+        return d
+
+    def _exit_depth(self) -> None:
+        ident = threading.get_ident()
+        self._depths[ident] = max(self._depths.get(ident, 1) - 1, 0)
+
     def _push(self, ev: Dict[str, Any]) -> None:
-        if len(self._buf) >= self.capacity:
-            self._buf.popleft()
-            self.dropped += 1
-        self._buf.append(ev)
+        with self._lock:
+            if len(self._buf) >= self.capacity:
+                self._buf.popleft()
+                self.dropped += 1
+            self._buf.append(ev)
 
     def span(self, name: str, cat: str = "serving",
              args: Optional[dict] = None) -> _Span:
@@ -126,15 +162,17 @@ class Tracer:
                 args: Optional[dict] = None) -> None:
         self._push({"ph": "i", "name": name, "cat": cat,
                     "ts": (time.perf_counter() - self.epoch) * 1e6,
-                    "dur": 0.0, "depth": self._depth,
-                    "args": dict(args or {})})
+                    "dur": 0.0,
+                    "depth": self._depths.get(threading.get_ident(), 0),
+                    "tid": self._tid(), "args": dict(args or {})})
 
     def counter(self, name: str, value: float,
                 cat: str = "serving") -> None:
         self._push({"ph": "C", "name": name, "cat": cat,
                     "ts": (time.perf_counter() - self.epoch) * 1e6,
-                    "dur": 0.0, "depth": self._depth,
-                    "args": {"value": float(value)}})
+                    "dur": 0.0,
+                    "depth": self._depths.get(threading.get_ident(), 0),
+                    "tid": self._tid(), "args": {"value": float(value)}})
 
     # -- access / export ----------------------------------------------
 
@@ -148,7 +186,7 @@ class Tracer:
     def clear(self) -> None:
         self._buf.clear()
         self.dropped = 0
-        self._depth = 0
+        self._depths.clear()
 
     def to_jsonl(self, path: str) -> str:
         """One event object per line — the replay cost model's input."""
@@ -163,8 +201,8 @@ class Tracer:
         out = []
         for ev in self.events():
             ce = {"name": ev["name"], "cat": ev["cat"] or "serving",
-                  "ph": ev["ph"], "ts": ev["ts"], "pid": 0, "tid": 0,
-                  "args": ev["args"]}
+                  "ph": ev["ph"], "ts": ev["ts"], "pid": 0,
+                  "tid": ev.get("tid", 0), "args": ev["args"]}
             if ev["ph"] == "X":
                 ce["dur"] = ev["dur"]
             if ev["ph"] == "i":

@@ -71,11 +71,21 @@ class SwitchEngine:
 
     With an ``AdapterStore`` attached, packs may be referred to by name —
     ``load``/``switch``/``load_fused`` accept either an ``AdapterPack`` or a
-    registered adapter id, and the store handles disk residency."""
+    registered adapter id, and the store handles disk residency.
 
-    def __init__(self, params, store=None):
+    ``blocking=False`` rides JAX async dispatch: ``load``/``unload`` return
+    as soon as the sparse scatter is *dispatched*, so the device-side
+    update overlaps whatever the host does next (e.g. an in-flight decode
+    step driven from another params tree). The swap is still ordered
+    before any later computation that reads ``self.params``; only the
+    host-side sync is skipped. ``SwitchStats.seconds`` then measures
+    dispatch, not completion — keep the default for switch-latency
+    benchmarking."""
+
+    def __init__(self, params, store=None, blocking: bool = True):
         self.params = params
         self.store = store
+        self.blocking = blocking
         self.active: List[AdapterPack] = []
         self.history: List[SwitchStats] = []
 
@@ -96,7 +106,8 @@ class SwitchEngine:
         with trace.span("switch.load", cat="switch", name=pack.name,
                         bytes=pack.nbytes()):
             self._apply(pack, +1.0)
-            jax.block_until_ready(jax.tree.leaves(self.params)[0])
+            if self.blocking:
+                jax.block_until_ready(jax.tree.leaves(self.params)[0])
         dt = time.perf_counter() - t0
         self.active.append(pack)
         st = SwitchStats(pack.name, dt, pack.num_params(), pack.nbytes(),
@@ -112,7 +123,8 @@ class SwitchEngine:
         with trace.span("switch.unload", cat="switch", name=pack.name,
                         bytes=pack.nbytes()):
             self._apply(pack, -1.0)
-            jax.block_until_ready(jax.tree.leaves(self.params)[0])
+            if self.blocking:
+                jax.block_until_ready(jax.tree.leaves(self.params)[0])
         dt = time.perf_counter() - t0
         st = SwitchStats("-" + pack.name, dt, pack.num_params(),
                          pack.nbytes(), _tree_bytes(self.params))

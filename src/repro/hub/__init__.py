@@ -38,4 +38,4 @@ from repro.hub.packio import (PackFormatError, QuantPack,  # noqa: F401
                               load_pack, peek_pack, save_pack)
 from repro.hub.serving import (PagedServingEngine, ServeFuture,  # noqa: F401
                                ServingEngine)
-from repro.hub.store import AdapterStore  # noqa: F401
+from repro.hub.store import AdapterStore, PrefetchHandle  # noqa: F401

@@ -43,6 +43,22 @@ actual tokens, not worst-case stripes:
 Greedy decode throughout, so both engines are token-for-token identical to
 the fixed-batch engine for the same prompt+adapter (pinned by the parity
 tests, including through shared-prefix admission).
+
+**Async adapter prefetch** (``async_prefetch=True``, both engines): a cold
+request's adapter starts loading the moment it enters the admission queue
+— the disk read on the store's prefetch workers (``prefetch.disk`` spans),
+the device-table build + H2D upload on the engine's build worker
+(``prefetch.h2d``), both overlapping the in-flight decode steps. Admission
+is FIFO-gated on the prefetch landing; hot tenants keep decoding off the
+previous tables (``MultiTenantEngine.ids_covered``) while a cold rebuild
+is in flight, and FusedLRU transitions are deferred until their
+post-transition tables are built in the background (``schedule(defer=)``).
+When there is no live decode to hide behind, the engine blocks on the head
+request (``prefetch.stall`` spans — the cost async could not hide;
+``replay.verify_overlap`` reports the fraction it did). Per-request token
+output is identical on every path — same prefill/decode math, same builder
+— and with the flag off (default) the engines are byte-for-byte the old
+synchronous code path.
 """
 from __future__ import annotations
 
@@ -75,12 +91,16 @@ class ServeFuture:
         self.finish_time: Optional[float] = None
         self.ttft: Optional[float] = None     # seconds to first token
         self.first_token_step: Optional[int] = None
+        self.cold = False     # adapter needed a disk load at submit time
+        self.cancelled = False
         self._done = False
 
     def done(self) -> bool:
         return self._done
 
     def result(self) -> np.ndarray:
+        if self.cancelled:
+            raise RuntimeError(f"request {self.rid} was cancelled")
         if not self._done:
             raise RuntimeError(f"request {self.rid} still in flight "
                                f"({len(self.tokens)}/{self.max_tokens} tokens)"
@@ -90,10 +110,11 @@ class ServeFuture:
 
 class _Pending:
     def __init__(self, fut: ServeFuture, prompt: np.ndarray,
-                 eos_id: Optional[int]):
+                 eos_id: Optional[int], handles=None):
         self.fut = fut
         self.prompt = prompt
         self.eos_id = eos_id
+        self.handles = handles or []   # in-flight store prefetches
 
 
 def _slot_insert(big, small, slot: int, axes):
@@ -135,8 +156,114 @@ def _resolve_adapter(engine: MultiTenantEngine, adapter: Tenant) -> Tenant:
 class _EngineCommon:
     """Request bookkeeping shared by the lane and paged engines."""
 
+    async_prefetch = False    # overridden per instance by the constructors
+
     def register(self, pack) -> None:
         self.engine.register(pack)
+
+    # -- async prefetch pipeline ---------------------------------------
+    #
+    # With ``async_prefetch=True`` a cold request's adapter starts loading
+    # the moment it enters the admission queue: the disk read runs on the
+    # store's worker pool, the device-table build on the engine's build
+    # worker, and both overlap the in-flight decode steps. The request is
+    # only admitted once its packs are registered, and hot tenants keep
+    # decoding off the previous tables (``ids_covered``) while the rebuild
+    # is in flight. With the flag off (default) nothing below runs and the
+    # engines behave exactly as the synchronous path always has.
+
+    def _prepare_adapter(self, adapter):
+        """Submit-side adapter resolution. Sync mode registers (and
+        disk-loads) inline, exactly as before; async mode only *starts*
+        the loads and hands the handles to the queued request. Returns
+        (normalized adapter, handles, cold)."""
+        adapter = normalize_tenant(adapter)
+        from repro.core.switching import tenant_members
+        store = self.engine.store
+        members = tenant_members(adapter)
+        cold = any(m not in self.engine.packs
+                   and not (store is not None
+                            and getattr(store, "is_resident",
+                                        lambda _n: True)(m))
+                   for m in members)
+        if not self.async_prefetch:
+            return _resolve_adapter(self.engine, adapter), [], cold
+        handles = []
+        for m in members:
+            if m in self.engine.packs:
+                # already in the device-table tier: nothing to load
+                trace.instant("prefetch.hit", cat="store", name=m,
+                              tier="tables")
+                continue
+            if store is None or m not in store:
+                raise KeyError(f"request names unregistered adapter {m!r}")
+            handles.append(store.prefetch(
+                m, dequantize=self.engine.table_dtype != "int8"))
+        return adapter, handles, cold
+
+    def _drain_prefetches(self) -> None:
+        """Register every queued request whose prefetch has landed, and
+        keep a background table build moving for any pending dirt or
+        deferred fused transition. Never blocks."""
+        if not self.async_prefetch:
+            return
+        for p in self._queue:
+            if p.handles and all(h.done() for h in p.handles):
+                for h in p.handles:
+                    self.engine.register(h.result())
+                p.handles = []
+        self.engine.kick_async_build()
+
+    def _stall_for_head(self) -> None:
+        """No live decode to hide behind: block on the head request's
+        prefetch so admission can proceed. The span is the measured cost
+        async serving could NOT hide."""
+        p = self._queue[0]
+        with trace.span("prefetch.stall", cat="store", rid=p.fut.rid):
+            for h in p.handles:
+                self.engine.register(h.result())
+            p.handles = []
+        self.engine.kick_async_build()
+
+    def _admittable(self, p, had_live: bool) -> bool:
+        """FIFO admission gate for the async pipeline: a request enters
+        only once its packs are registered, and — while a table rebuild is
+        in flight — only if the current tables already cover its tenant
+        (hot) or there is no live decode the stall could disturb."""
+        if not self.async_prefetch:
+            return True
+        if p.handles:
+            return False              # disk load still in flight
+        if self.engine.tables_ready():
+            return True
+        if self.engine.ids_covered([p.fut.adapter]):
+            return True
+        return not had_live
+
+    def cancel(self, fut: ServeFuture) -> bool:
+        """Abort a still-queued request: drop it from the queue and cancel
+        any in-flight prefetch (the disk read is skipped when it has not
+        started). Admitted requests cannot be cancelled."""
+        for p in self._queue:
+            if p.fut is fut:
+                self._queue.remove(p)
+                for h in p.handles:
+                    h.cancel()
+                p.handles = []
+                fut.cancelled = True
+                fut._done = True
+                trace.instant("prefetch.cancel", cat="store", rid=fut.rid)
+                return True
+        return False
+
+    def shutdown(self, include_store: bool = False) -> None:
+        """Join the engine's background build worker (and optionally the
+        store's prefetch pool — stores may be shared, so opt-in)."""
+        self.engine.shutdown()
+        store = self.engine.store
+        if include_store and store is not None \
+                and hasattr(store, "shutdown"):
+            store.shutdown()
 
     def pending(self) -> int:
         return len(self._queue) + sum(p is not None for p in self._active)
@@ -179,15 +306,18 @@ class ServingEngine(_EngineCommon):
     def __init__(self, cfg, params, *, slots: int = 4, cache_size: int = 128,
                  scheduler: Optional[FusedLRU] = None, store=None,
                  table_dtype: str = "f32",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 async_prefetch: bool = False, slot_pad: int = 1):
         if cfg.encoder_only:
             raise ValueError("encoder-only archs have no decode serving path")
         self.cfg = cfg
+        self.async_prefetch = async_prefetch
         self.slots = slots
         self.cache_size = cache_size
         self.engine = MultiTenantEngine(cfg, params, scheduler=scheduler,
                                         store=store, table_dtype=table_dtype,
-                                        interpret=interpret)
+                                        interpret=interpret,
+                                        slot_pad=slot_pad)
         self.caches = lm.init_cache(cfg, slots, cache_size)
         self._axes = lm.cache_batch_axes(cfg)
         self._active: List[Optional[_Pending]] = [None] * slots
@@ -220,11 +350,15 @@ class ServingEngine(_EngineCommon):
             raise ValueError(f"prompt ({prompt.shape[0]}) + max_tokens "
                              f"({max_tokens}) needs {need} cache slots, "
                              f"engine has {self.cache_size}")
-        adapter = _resolve_adapter(self.engine, adapter)
+        # arrival is stamped BEFORE adapter resolution: the sync path's
+        # inline disk load is queue time the request actually waited
+        t_sub = time.perf_counter()
+        adapter, handles, cold = self._prepare_adapter(adapter)
         fut = ServeFuture(self._rid, adapter, max_tokens)
-        fut.submit_time = time.perf_counter()
+        fut.cold = cold
+        fut.submit_time = t_sub
         self._rid += 1
-        self._queue.append(_Pending(fut, prompt, eos_id))
+        self._queue.append(_Pending(fut, prompt, eos_id, handles))
         return fut
 
     # ------------------------------------------------------------------
@@ -251,8 +385,9 @@ class ServingEngine(_EngineCommon):
         with trace.span("admit", rid=p.fut.rid, slot=slot,
                         prompt=int(p.prompt.shape[0])):
             names: List[Tenant] = [p.fut.adapter]
-            ids = self.engine.ids_for(names)
-            wp = self.engine.wrapped_params(ids)
+            stale = self.async_prefetch
+            ids = self.engine.ids_for(names, stale_ok=stale)
+            wp = self.engine.wrapped_params(ids, stale_ok=stale)
             logits, c1 = self.engine._prefill(wp, self._batch_for(p.prompt),
                                               self.cache_size)
             self.caches = [_slot_insert(big, small, slot, ax)
@@ -270,8 +405,15 @@ class ServingEngine(_EngineCommon):
         """Admit queued requests into free slots, then run one decode step
         over every occupied lane. Returns False when fully drained."""
         with trace.span("step", engine="lane") as sp:
+            self._drain_prefetches()
+            had_live = any(a is not None for a in self._active)
+            if self.async_prefetch and not had_live and self._queue \
+                    and self._queue[0].handles:
+                self._stall_for_head()
             for slot in range(self.slots):
                 if self._active[slot] is None and self._queue:
+                    if not self._admittable(self._queue[0], had_live):
+                        break          # FIFO: head's prefetch still landing
                     self._admit(slot, self._queue.popleft())
             live = [s for s in range(self.slots)
                     if self._active[s] is not None]
@@ -286,10 +428,12 @@ class ServingEngine(_EngineCommon):
             # the scheduler sees only live lanes: idle slots are not
             # base-model traffic, and counting them would dilute every
             # tenant's share
-            self.engine.schedule([names[s] for s in live])
+            self.engine.schedule([names[s] for s in live],
+                                 defer=self.async_prefetch)
             with trace.span("decode", live=len(live)):
-                ids = self.engine.ids_for(names)
-                wp = self.engine.wrapped_params(ids)
+                stale = self.async_prefetch
+                ids = self.engine.ids_for(names, stale_ok=stale)
+                wp = self.engine.wrapped_params(ids, stale_ok=stale)
                 toks = jnp.asarray(self._last[:, None])
                 logits, self.caches = self.engine._decode(
                     wp, toks, self.caches, jnp.asarray(self._pos))
@@ -306,10 +450,10 @@ class ServingEngine(_EngineCommon):
 
 class _PagedRequest:
     __slots__ = ("fut", "prompt", "eos_id", "need", "nblk", "state", "done",
-                 "pages", "reserve")
+                 "pages", "reserve", "handles")
 
     def __init__(self, fut: ServeFuture, prompt: np.ndarray,
-                 eos_id: Optional[int], need: int, nblk: int):
+                 eos_id: Optional[int], need: int, nblk: int, handles=None):
         self.fut = fut
         self.prompt = prompt
         self.eos_id = eos_id
@@ -319,6 +463,7 @@ class _PagedRequest:
         self.done = 0             # prompt tokens already in the cache
         self.pages: List[int] = []     # block-table pages (1 ref each)
         self.reserve: List[int] = []   # preallocated COW spares
+        self.handles = handles or []   # in-flight store prefetches
 
 
 class PagedServingEngine(_EngineCommon):
@@ -331,11 +476,13 @@ class PagedServingEngine(_EngineCommon):
                  chunk_size: Optional[int] = None,
                  scheduler: Optional[FusedLRU] = None, store=None,
                  table_dtype: str = "f32", quant_kv: bool = False,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 async_prefetch: bool = False, slot_pad: int = 1):
         if cfg.encoder_only:
             raise ValueError("encoder-only archs have no decode serving path")
         from repro.serving.kvcache import PagePool, copy_page, pages_for
         self.cfg = cfg
+        self.async_prefetch = async_prefetch
         self.slots = slots
         self.num_pages = num_pages
         self.page_size = page_size
@@ -344,7 +491,8 @@ class PagedServingEngine(_EngineCommon):
         self.chunk_size = chunk_size or page_size
         self.engine = MultiTenantEngine(cfg, params, scheduler=scheduler,
                                         store=store, table_dtype=table_dtype,
-                                        interpret=interpret)
+                                        interpret=interpret,
+                                        slot_pad=slot_pad)
         self.pool = PagePool(num_pages, page_size)
         self.caches = lm.init_paged_cache(cfg, num_pages, page_size,
                                           quant=quant_kv)
@@ -404,11 +552,15 @@ class PagedServingEngine(_EngineCommon):
         if nblk > self.num_pages - 1:
             raise ValueError(f"request needs {nblk} pages, pool has "
                              f"{self.num_pages - 1}")
-        adapter = _resolve_adapter(self.engine, adapter)
+        # arrival stamp precedes adapter resolution (see ServingEngine.submit)
+        t_sub = time.perf_counter()
+        adapter, handles, cold = self._prepare_adapter(adapter)
         fut = ServeFuture(self._rid, adapter, max_tokens)
-        fut.submit_time = time.perf_counter()
+        fut.cold = cold
+        fut.submit_time = t_sub
         self._rid += 1
-        self._queue.append(_PagedRequest(fut, prompt, eos_id, need, nblk))
+        self._queue.append(_PagedRequest(fut, prompt, eos_id, need, nblk,
+                                         handles))
         return fut
 
     # ------------------------------------------------------------------
@@ -487,8 +639,9 @@ class PagedServingEngine(_EngineCommon):
             self._ensure_writable(slot, lo, hi)
             toks = np.zeros((1, self.chunk_size), np.int32)
             toks[0, :hi - lo] = r.prompt[lo:hi]
-            ids = self.engine.ids_for([r.fut.adapter])
-            wp = self.engine.wrapped_params(ids)
+            stale = self.async_prefetch
+            ids = self.engine.ids_for([r.fut.adapter], stale_ok=stale)
+            wp = self.engine.wrapped_params(ids, stale_ok=stale)
             logits, self.caches = self._prefill_chunk(
                 wp, jnp.asarray(toks), self.caches,
                 jnp.asarray(self._bt[slot:slot + 1]),
@@ -514,8 +667,15 @@ class PagedServingEngine(_EngineCommon):
         """FIFO-admit while pages last, run ONE prefill chunk, then one
         decode step over every live lane. Returns False when drained."""
         with trace.span("step", engine="paged") as sp:
+            self._drain_prefetches()
+            had_live = any(a is not None for a in self._active)
+            if self.async_prefetch and not had_live and self._queue \
+                    and self._queue[0].handles:
+                self._stall_for_head()
             for slot in range(self.slots):
                 if self._active[slot] is None and self._queue:
+                    if not self._admittable(self._queue[0], had_live):
+                        break          # FIFO: head's prefetch still landing
                     if not self._try_admit(slot, self._queue[0]):
                         break
                     self._queue.popleft()
@@ -551,10 +711,12 @@ class PagedServingEngine(_EngineCommon):
                 names = [self._active[s].fut.adapter
                          if s in live_set else None
                          for s in range(self.slots)]
-                self.engine.schedule([names[s] for s in live])
+                self.engine.schedule([names[s] for s in live],
+                                     defer=self.async_prefetch)
                 with trace.span("decode", live=len(live)):
-                    ids = self.engine.ids_for(names)
-                    wp = self.engine.wrapped_params(ids)
+                    stale = self.async_prefetch
+                    ids = self.engine.ids_for(names, stale_ok=stale)
+                    wp = self.engine.wrapped_params(ids, stale_ok=stale)
                     for s in live:
                         self._ensure_writable(s, int(self._pos[s]),
                                               int(self._pos[s]) + 1)

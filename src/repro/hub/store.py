@@ -10,22 +10,53 @@ the store by name and get back an immutable ``AdapterPack`` handle:
   store.register_file("a0.shpk")        # register an existing file (lazy)
   engine.register(store.get("a0"))      # or engine.register("a0")
 
-Residency: the resident form is whatever the file stores — f32 packs stay
-f32, int8 packs stay in their ~2-byte/entry ``QuantPack`` form and are only
-dequantized at the ``get`` boundary, so an int8 store holds >=3x more
-tenants in the same budget. When loading a pack would exceed
-``budget_bytes``, least-recently-used residents are dropped (their files
-remain; a later ``get`` reloads). Packs added with ``pin=True`` — or added
-in-memory with no backing file — are never evicted.
+Residency is hierarchical — three tiers, each LRU under its own budget:
+
+  * **disk** — the registered ``.shpk`` files (unbounded; never dropped).
+  * **host-RAM raw tier** (``budget_bytes``) — the resident form is
+    whatever the file stores: f32 packs stay f32, int8 packs stay in
+    their ~2-byte/entry ``QuantPack`` form, so an int8 store holds >=3x
+    more tenants in the same budget. Loading past the budget evicts
+    least-recently-used residents (files remain; a later ``get``
+    reloads). Packs added with ``pin=True`` — or added in-memory with no
+    backing file — are never evicted.
+  * **host staging tier** (``staging_bytes``, optional) — decoded,
+    upload-ready f32 ``AdapterPack`` buffers cached after the first
+    dequant, playing the role of pinned host staging memory for the H2D
+    path: a ``get`` that hits staging skips the dequant entirely. Purely
+    derived data, so it is evictable regardless of pinning and disabled
+    by default (``staging_bytes=None``).
+
+The device-table tier lives in the engines (``MultiTenantEngine`` slot
+tables, ``FusedLRU``); the store feeds it.
+
+Async prefetch: ``prefetch(name)`` starts the disk load (and decode into
+staging) on a small worker pool and returns a ``PrefetchHandle``
+immediately, so serving engines can begin an adapter's load the moment
+its request enters the admission queue and overlap it with in-flight
+decode. Worker loads record ``prefetch.disk`` spans (the synchronous
+path keeps the ``disk_load`` name, so the replay model can tell stall
+from overlap); submits emit ``prefetch.hit`` / ``prefetch.miss``
+instants and a ``store.inflight_bytes`` counter. While a handle is
+outstanding its adapter is *pinned against eviction* (a refcount on
+in-flight loads): LRU pressure from concurrent loads can never drop a
+pack another request is about to consume. Duplicate prefetches of one
+name share a single disk read.
 
 Handles are immutable by contract: entries are jax/np arrays shared with
 the store's resident copy; engines must never write into them (they never
 do — loading is a scatter-add into the engine's own weights).
+
+Thread-safety: all tier bookkeeping is guarded by one reentrant lock;
+disk reads and dequants happen outside it. ``get``/``get_raw`` join an
+in-flight load of the same name instead of issuing a second read.
 """
 from __future__ import annotations
 
 import os
+import threading
 from collections import OrderedDict
+from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
 from typing import Dict, List, Optional, Union  # noqa: F401 (Union: annot.)
 
 from repro.analysis import trace
@@ -34,20 +65,96 @@ from repro.hub.packio import (QuantPack, load_pack, peek_pack,
                               quantize_pack, save_pack)
 
 
+class PrefetchHandle:
+    """An in-flight (or already-satisfied) adapter load.
+
+    ``result()`` blocks until the load lands and returns the pack in the
+    requested form; ``done()`` polls. ``cancel()`` abandons interest —
+    the disk read is skipped if it has not started yet; either way the
+    handle's eviction pin is dropped. Exactly one of ``result`` /
+    ``cancel`` / ``release`` releases the pin (all are idempotent).
+
+    ``cold`` records whether the adapter was non-resident at submit time
+    — the benches use it to split TTFT into cold-miss vs hot lanes.
+    """
+
+    __slots__ = ("store", "name", "cold", "dequantize", "_fut", "_released")
+
+    def __init__(self, store: "AdapterStore", name: str, cold: bool,
+                 dequantize: bool, fut: Optional[Future]):
+        self.store = store
+        self.name = name
+        self.cold = cold
+        self.dequantize = dequantize
+        self._fut = fut                    # None = was resident at submit
+        self._released = False
+
+    def done(self) -> bool:
+        return self._fut is None or self._fut.done()
+
+    def result(self, timeout: Optional[float] = None) \
+            -> Union[AdapterPack, QuantPack]:
+        """The loaded pack (raw form, or dequantized when the handle was
+        created with ``dequantize=True``). Releases the eviction pin."""
+        try:
+            if self._fut is not None:
+                try:
+                    self._fut.result(timeout=timeout)
+                except CancelledError:
+                    pass      # another handle's abort raced us; reload below
+            # re-read through the tiers so LRU recency is recorded and a
+            # staged dequant is reused; the pin guarantees residency
+            if self.dequantize:
+                return self.store.get(self.name)
+            return self.store.get_raw(self.name)
+        finally:
+            self.release()
+
+    def cancel(self) -> bool:
+        """Abandon the prefetch (request aborted). Returns True when the
+        disk read was skipped entirely."""
+        skipped = False
+        if self._fut is not None and not self._released:
+            skipped = self.store._cancel_inflight(self.name, self._fut)
+        self.release()
+        return skipped
+
+    def release(self) -> None:
+        """Drop the eviction pin without consuming the result."""
+        if not self._released:
+            self._released = True
+            self.store._unpin_inflight(self.name)
+
+
 class AdapterStore:
     def __init__(self, root: Optional[str] = None,
-                 budget_bytes: Optional[int] = None):
+                 budget_bytes: Optional[int] = None,
+                 staging_bytes: Optional[int] = None,
+                 workers: int = 2):
         self.root = root
         if root is not None:
             os.makedirs(root, exist_ok=True)
         self.budget_bytes = budget_bytes
+        self.staging_bytes = staging_bytes
+        self.workers = max(int(workers), 1)
         self._paths: Dict[str, Optional[str]] = {}    # id -> file (None = mem)
         self._pinned: set = set()
         # id -> resident AdapterPack | QuantPack, LRU order (oldest first)
         self._resident: "OrderedDict[str, Union[AdapterPack, QuantPack]]" \
             = OrderedDict()
+        # id -> decoded f32 AdapterPack staging buffers, LRU order
+        self._staging: "OrderedDict[str, AdapterPack]" = OrderedDict()
+        self._lock = threading.RLock()
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._inflight: Dict[str, int] = {}           # eviction pins (refcnt)
+        self._futs: Dict[str, Future] = {}            # dedup in-flight loads
+        self._fut_est: Dict[str, int] = {}            # submit-time byte est.
+        self._inflight_bytes = 0
         self.loads = 0                                # disk loads (cache miss)
         self.evictions = 0
+        self.staging_hits = 0
+        self.prefetch_hits = 0                        # submit found resident
+        self.prefetch_misses = 0                      # submit went to disk
 
     # ------------------------------------------------------------------
     # Registration
@@ -62,26 +169,31 @@ class AdapterStore:
                 raise ValueError("bf16 pack storage needs a file-backed "
                                  "store (root=None holds f32 or int8)")
             form = quantize_pack(pack) if values == "int8" else pack
-            self._paths[pack.name] = None
-            self._pinned.add(pack.name)               # nothing to reload from
-            self._admit(pack.name, form)
+            with self._lock:
+                self._paths[pack.name] = None
+                self._pinned.add(pack.name)           # nothing to reload from
+                self._admit(pack.name, form)
             return pack.name
         path = os.path.join(self.root, f"{pack.name}.shpk")
         save_pack(pack, path, values=values)
-        self._paths[pack.name] = path
-        if pin:
-            self._pinned.add(pack.name)
-        self._resident.pop(pack.name, None)           # re-add replaces
+        with self._lock:
+            self._paths[pack.name] = path
+            if pin:
+                self._pinned.add(pack.name)
+            self._resident.pop(pack.name, None)       # re-add replaces
+            self._staging.pop(pack.name, None)
         return pack.name
 
     def register_file(self, path: str, name: Optional[str] = None,
                       pin: bool = False) -> str:
         """Register an existing pack file without reading its payload."""
         name = name or peek_pack(path)["name"]
-        self._paths[name] = path
-        if pin:
-            self._pinned.add(name)
-        self._resident.pop(name, None)
+        with self._lock:
+            self._paths[name] = path
+            if pin:
+                self._pinned.add(name)
+            self._resident.pop(name, None)
+            self._staging.pop(name, None)
         return name
 
     # ------------------------------------------------------------------
@@ -94,63 +206,254 @@ class AdapterStore:
     def __contains__(self, name: str) -> bool:
         return name in self._paths
 
+    def is_resident(self, name: str) -> bool:
+        """Host-RAM-tier hit test (no LRU touch) — what the serving engines
+        use to stamp a request cold/hot at submit time."""
+        with self._lock:
+            return name in self._resident
+
     def get(self, name: str) -> AdapterPack:
         """Immutable pack handle; loads from disk (and evicts LRU residents
-        past the byte budget) on a miss."""
+        past the byte budget) on a miss. Quantized packs dequantize at
+        this boundary — through the staging tier when one is configured."""
+        with self._lock:
+            staged = self._staging.get(name)
+            if staged is not None:
+                self._staging.move_to_end(name)
+                self.staging_hits += 1
+                # keep raw-tier recency in step so eviction order is sane
+                if name in self._resident:
+                    self._resident.move_to_end(name)
+                return staged
         form = self.get_raw(name)
-        return form.dequantize() if isinstance(form, QuantPack) else form
+        if isinstance(form, QuantPack):
+            return self._stage(name, form)
+        return form
 
     def get_raw(self, name: str) -> Union[AdapterPack, QuantPack]:
         """The resident form as stored: an int8 pack comes back as its
         ``QuantPack`` (no f32 dequant round trip) — what
         ``MultiTenantEngine(table_dtype="int8")`` builds device tables
         from; f32/bf16 packs come back as plain ``AdapterPack``s. Same
-        residency/LRU accounting as ``get``."""
+        residency/LRU accounting as ``get``. Joins an in-flight prefetch
+        of the same name instead of reading the file twice."""
         if name not in self._paths:
             raise KeyError(f"unknown adapter {name!r}; registered: "
                            f"{self.names()}")
-        form = self._resident.get(name)
-        if form is None:
-            path = self._paths[name]
-            assert path is not None, f"in-memory pack {name!r} lost"
-            with trace.span("disk_load", cat="store", name=name) as sp:
-                form = load_pack(path, dequantize=False)
-                sp.set(bytes=form.nbytes())
-            self.loads += 1
-            self._admit(name, form)
-        else:
-            self._resident.move_to_end(name)
-        return form
+        with self._lock:
+            form = self._resident.get(name)
+            if form is not None:
+                self._resident.move_to_end(name)
+                return form
+            fut = self._futs.get(name)
+        if fut is not None:
+            try:
+                return fut.result()
+            except (CancelledError, Exception):
+                pass                  # cancelled/failed: fall through, reload
+            with self._lock:
+                form = self._resident.get(name)
+                if form is not None:
+                    self._resident.move_to_end(name)
+                    return form
+        # synchronous load; pin so concurrent worker admits can't evict
+        # the pack between our _admit and the caller seeing it
+        self._pin_inflight(name)
+        try:
+            return self._load(name, span="disk_load")
+        finally:
+            self._unpin_inflight(name)
+
+    # ------------------------------------------------------------------
+    # Async prefetch
+    # ------------------------------------------------------------------
+
+    def prefetch(self, name: str, dequantize: bool = False) \
+            -> PrefetchHandle:
+        """Start loading ``name`` in the background; returns immediately.
+
+        If the pack is already resident this is a hit: the handle is
+        already done and ``result()`` is instant. Otherwise the disk
+        read (+ decode into staging, when ``dequantize`` and a staging
+        tier exist) runs on the store's worker pool, recorded as a
+        ``prefetch.disk`` span on that worker's tid. The adapter is
+        pinned against eviction until the handle is released."""
+        if name not in self._paths:
+            raise KeyError(f"unknown adapter {name!r}; registered: "
+                           f"{self.names()}")
+        with self._lock:
+            self._pin_inflight(name)
+            if name in self._resident:
+                self._resident.move_to_end(name)
+                self.prefetch_hits += 1
+                trace.instant("prefetch.hit", cat="store", name=name)
+                return PrefetchHandle(self, name, cold=False,
+                                      dequantize=dequantize, fut=None)
+            self.prefetch_misses += 1
+            trace.instant("prefetch.miss", cat="store", name=name)
+            fut = self._futs.get(name)
+            if fut is None:
+                path = self._paths[name]
+                assert path is not None, f"in-memory pack {name!r} lost"
+                try:
+                    est = os.path.getsize(path)
+                except OSError:
+                    est = 0
+                self._inflight_bytes += est
+                self._fut_est[name] = est
+                trace.counter("store.inflight_bytes", self._inflight_bytes,
+                              cat="store")
+                if self._pool is None:
+                    self._pool = ThreadPoolExecutor(
+                        max_workers=self.workers,
+                        thread_name_prefix="shira-prefetch")
+                fut = self._pool.submit(self._prefetch_job, name,
+                                        dequantize, est)
+                self._futs[name] = fut
+            return PrefetchHandle(self, name, cold=True,
+                                  dequantize=dequantize, fut=fut)
+
+    def _prefetch_job(self, name: str, dequantize: bool, est: int):
+        try:
+            form = self._load(name, span="prefetch.disk")
+            if dequantize and isinstance(form, QuantPack):
+                self._stage(name, form, span="prefetch.decode")
+            return form
+        finally:
+            with self._lock:
+                self._futs.pop(name, None)
+                self._fut_est.pop(name, None)
+                self._inflight_bytes -= est
+                trace.counter("store.inflight_bytes", self._inflight_bytes,
+                              cat="store")
+
+    def _cancel_inflight(self, name: str, fut: Future) -> bool:
+        """Try to cancel a not-yet-started load. Only succeeds when this
+        is the load's sole outstanding pin (other handles sharing the
+        future keep it alive); cleans up the dedup/byte bookkeeping the
+        skipped job would have."""
+        with self._lock:
+            if self._inflight.get(name, 0) > 1:
+                return False          # someone else still wants this load
+            if self._futs.get(name) is not fut or not fut.cancel():
+                return False
+            self._futs.pop(name, None)
+            est = self._fut_est.pop(name, 0)
+            self._inflight_bytes -= est
+            trace.counter("store.inflight_bytes", self._inflight_bytes,
+                          cat="store")
+            return True
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Join the prefetch worker pool (tests / clean teardown)."""
+        pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=wait)
 
     # ------------------------------------------------------------------
     # Residency accounting
     # ------------------------------------------------------------------
 
     def resident_bytes(self) -> int:
-        return sum(f.nbytes() for f in self._resident.values())
+        with self._lock:
+            return sum(f.nbytes() for f in self._resident.values())
 
     def resident_names(self) -> List[str]:
         """LRU order, oldest first."""
-        return list(self._resident)
+        with self._lock:
+            return list(self._resident)
+
+    def staged_bytes(self) -> int:
+        with self._lock:
+            return sum(p.nbytes() for p in self._staging.values())
+
+    def staged_names(self) -> List[str]:
+        with self._lock:
+            return list(self._staging)
+
+    def inflight_names(self) -> List[str]:
+        """Adapters currently pinned by outstanding loads/handles."""
+        with self._lock:
+            return sorted(self._inflight)
+
+    def _pin_inflight(self, name: str) -> None:
+        with self._lock:
+            self._inflight[name] = self._inflight.get(name, 0) + 1
+
+    def _unpin_inflight(self, name: str) -> None:
+        with self._lock:
+            n = self._inflight.get(name, 0) - 1
+            if n <= 0:
+                self._inflight.pop(name, None)
+            else:
+                self._inflight[name] = n
+
+    def _load(self, name: str, span: str) -> Union[AdapterPack, QuantPack]:
+        path = self._paths[name]
+        assert path is not None, f"in-memory pack {name!r} lost"
+        with trace.span(span, cat="store", name=name) as sp:
+            form = load_pack(path, dequantize=False)
+            sp.set(bytes=form.nbytes())
+        with self._lock:
+            self.loads += 1
+            self._admit(name, form)
+        return form
+
+    def _stage(self, name: str, form: QuantPack,
+               span: str = "dequant") -> AdapterPack:
+        """Dequantize through the staging tier (cache when configured)."""
+        with self._lock:
+            staged = self._staging.get(name)
+            if staged is not None:
+                self._staging.move_to_end(name)
+                self.staging_hits += 1
+                return staged
+        with trace.span(span, cat="store", name=name):
+            pack = form.dequantize()
+        if self.staging_bytes is None:
+            return pack
+        with self._lock:
+            self._staging[name] = pack
+            self._staging.move_to_end(name)
+            while self.staged_bytes() > self.staging_bytes:
+                victim = next((n for n in self._staging
+                               if n != name and n not in self._inflight),
+                              None)
+                if victim is None:
+                    break
+                del self._staging[victim]
+                trace.instant("store.stage_evict", cat="store", name=victim)
+        return pack
 
     def _admit(self, name: str, form) -> None:
-        self._resident[name] = form
-        self._resident.move_to_end(name)
-        if self.budget_bytes is None:
-            return
-        while self.resident_bytes() > self.budget_bytes:
-            victim = next((n for n in self._resident
-                           if n != name and n not in self._pinned), None)
-            if victim is None:
-                break            # only the newcomer/pinned left: keep it
-            del self._resident[victim]
-            self.evictions += 1
-            trace.instant("store.evict", cat="store", name=victim)
+        with self._lock:
+            self._resident[name] = form
+            self._resident.move_to_end(name)
+            if self.budget_bytes is None:
+                return
+            while self.resident_bytes() > self.budget_bytes:
+                # never evict the newcomer, pinned packs, or packs with an
+                # in-flight load/handle (a racing prefetch's result must
+                # stay resident until its handle is consumed)
+                victim = next((n for n in self._resident
+                               if n != name and n not in self._pinned
+                               and n not in self._inflight), None)
+                if victim is None:
+                    break        # only newcomer/pinned/in-flight left: keep
+                del self._resident[victim]
+                self._staging.pop(victim, None)
+                self.evictions += 1
+                trace.instant("store.evict", cat="store", name=victim)
 
     def evict(self, name: str) -> bool:
-        """Drop a resident form explicitly (the file stays registered)."""
-        if name in self._resident and self._paths.get(name) is not None:
-            del self._resident[name]
-            self.evictions += 1
-            return True
-        return False
+        """Drop a resident form explicitly (the file stays registered).
+        Refused while the adapter has an in-flight load or handle."""
+        with self._lock:
+            if (name in self._resident
+                    and self._paths.get(name) is not None
+                    and name not in self._inflight):
+                del self._resident[name]
+                self._staging.pop(name, None)
+                self.evictions += 1
+                return True
+            return False

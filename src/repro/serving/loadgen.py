@@ -134,6 +134,11 @@ class LoadReport:
     slo_ms: Optional[float]
     latencies_ms: List[float] = field(default_factory=list)
     ttfts_ms: List[float] = field(default_factory=list)
+    # TTFT split by the engine's cold stamp (``fut.cold``: the adapter was
+    # neither engine-registered nor store-resident at submit) — the async
+    # prefetch pipeline is judged on the cold tail specifically
+    ttfts_cold_ms: List[float] = field(default_factory=list)
+    ttfts_warm_ms: List[float] = field(default_factory=list)
     slo_met: int = 0
     goodput_tokens: int = 0
     per_phase_latencies_ms: Dict[int, List[float]] = field(
@@ -199,6 +204,8 @@ def run(engine, requests: Sequence[GenRequest], *,
         rep.per_phase_latencies_ms.setdefault(r.phase, []).append(lat_ms)
         if f.ttft is not None:
             rep.ttfts_ms.append(f.ttft * 1e3)
+            (rep.ttfts_cold_ms if getattr(f, "cold", False)
+             else rep.ttfts_warm_ms).append(f.ttft * 1e3)
         if slo_ms is None or lat_ms <= slo_ms:
             rep.slo_met += 1
             rep.goodput_tokens += len(f.tokens)

@@ -46,6 +46,7 @@ consumed via reshape rather than a matmul) are rejected — exclude them from
 from __future__ import annotations
 
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -158,10 +159,12 @@ class MultiTenantEngine:
 
     def __init__(self, cfg, params, *, scheduler: Optional[FusedLRU] = None,
                  store=None, table_dtype: str = "f32",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, slot_pad: int = 1):
         if table_dtype not in ("f32", "int8"):
             raise ValueError(f"table_dtype must be 'f32' or 'int8', got "
                              f"{table_dtype!r}")
+        if slot_pad < 1:
+            raise ValueError(f"slot_pad must be >= 1, got {slot_pad}")
         self.cfg = cfg
         self.shared = params                 # base (+ the fused packs, if any)
         self.packs: Dict[str, AdapterPack] = {}
@@ -169,6 +172,12 @@ class MultiTenantEngine:
         self.store = store
         self.table_dtype = table_dtype       # device-table value dtype
         self.interpret = interpret           # sidedelta mode (None = auto)
+        # slot-capacity bucket: the tables' adapter axis is rounded up to a
+        # multiple of this, so registering an adapter within the padded
+        # capacity keeps every table shape constant — no prefill/decode
+        # recompile on cold admission (padded slots hold zero-valued rows
+        # that contribute nothing). 1 = exact sizing (the old behavior).
+        self.slot_pad = slot_pad
         self.fused: Optional[Tenant] = None
         self.fuse_transitions = 0            # promote/demote scatter count
         self._shapes = _leaf_shapes(params)
@@ -180,6 +189,14 @@ class MultiTenantEngine:
         self._batch_no = 0                   # ids_for calls (stack recency)
         self.stack_ttl = 64                  # drop stacks idle this many calls
         self._dirty = False
+        self._structural = False             # old table rows invalid too
+        self._epoch = 0                      # bumps on table-invalidating change
+        self._build_pool: Optional[ThreadPoolExecutor] = None
+        self._build_fut = None               # (epoch, Future, decision|None)
+        self._pending = None                 # deferred FusedDecision
+        self.async_builds = 0                # background builds submitted
+        self.async_adopted = 0               # adopted (saved a sync rebuild)
+        self.async_stale = 0                 # discarded (state moved on)
 
         # the sidedelta mode is read at trace time (layers.sidedelta_backend)
         # — scope the traces so an engine-level override actually lands
@@ -226,6 +243,7 @@ class MultiTenantEngine:
             if path not in self._shapes:
                 raise KeyError(f"adapter {pack.name!r} targets unknown "
                                f"weight {path!r}")
+        brand_new = pack.name not in self.packs
         if pack.name in tenant_members(self.fused):
             # un-fuse the OLD delta before replacing the pack, or the next
             # demote would subtract the new one from a base holding the old
@@ -238,49 +256,66 @@ class MultiTenantEngine:
         self._qtables.pop(pack.name, None)
         if qp is not None:
             self._qpacks[pack.name] = qp
-        self._dirty = True
+        self._mark_dirty(additive=brand_new)
 
     def _tenants(self) -> set:
         """Side-served tenants: every registered adapter singly, plus every
         multi-adapter stack a request has named."""
         return set(self.packs) | set(self._stacks)
 
-    def _side_packs(self) -> Dict[Any, AdapterPack]:
-        """What each tenant's side delta must be, given the fused state."""
-        fused_m = tenant_members(self.fused)
+    def _mark_dirty(self, additive: bool = False) -> None:
+        """Tables no longer match the tenant/fused state. The epoch bump
+        invalidates any background build snapshotted before this point.
+
+        ``additive`` dirt only *adds* tenants (a new pack registered, a new
+        stack named): every existing table row is still correct, so serving
+        may keep using the stale tables for already-covered tenants
+        (``ids_covered``) while the rebuild runs in the background.
+        Structural dirt (re-register, promote/demote, anything touching the
+        fused state) invalidates existing rows as well."""
+        self._dirty = True
+        self._epoch += 1
+        if not additive:
+            self._structural = True
+
+    def _side_packs(self, packs, stacks, fused) -> Dict[Any, AdapterPack]:
+        """What each tenant's side delta must be, given the fused state.
+        Operates on explicit (possibly snapshotted) state so background
+        builds never read dicts the serving thread is mutating."""
+        fused_m = tenant_members(fused)
         out = {}
-        for t in self._tenants():
-            if t == self.fused:
+        for t in set(packs) | set(stacks):
+            if t == fused:
                 continue                     # fused tenant rides the base
             members = tenant_members(t)
             if not fused_m and len(members) == 1:
-                out[t] = self.packs[members[0]]
+                out[t] = packs[members[0]]
             else:
-                parts = ([self.packs[m] for m in members]
-                         + [self.packs[f] for f in fused_m])
+                parts = ([packs[m] for m in members]
+                         + [packs[f] for f in fused_m])
                 weights = [1.0] * len(members) + [-1.0] * len(fused_m)
                 out[t] = fuse_packs(
                     parts, weights=weights,
                     name=(tenant_key(t) +
-                          (f"-minus-{tenant_key(self.fused)}" if fused_m
+                          (f"-minus-{tenant_key(fused)}" if fused_m
                            else "")))
         if fused_m:                          # base traffic must un-see it
             out[_BASE_SLOT] = fuse_packs(
-                [self.packs[f] for f in fused_m],
+                [packs[f] for f in fused_m],
                 weights=[-1.0] * len(fused_m),
-                name=f"-{tenant_key(self.fused)}")
+                name=f"-{tenant_key(fused)}")
         return out
 
-    def _quant_direct(self, name, pk, path):
+    def _quant_direct(self, name, pk, path, packs, qpacks):
         """The store's quantized values for this side pack, when they can be
         used verbatim: a plain single-adapter tenant (no diff/merge math)
         registered from a QuantPack. Returns (idx (nl, k) int64,
         vq (nl, k) int8, scale float) or None."""
         if self.table_dtype != "int8" or not isinstance(name, str):
             return None
-        if pk is not self.packs.get(name) or name not in self._qpacks:
+        if pk is not packs.get(name) or name not in qpacks:
             return None                      # diff/merged pack: f32 math
-        qp = self._qpacks[name]
+        qp = qpacks[name]
         if path not in qp.entries:
             return None
         if name not in self._qtables:    # decode the gap streams once
@@ -289,18 +324,30 @@ class MultiTenantEngine:
         return idx, vq, scale * qp.alpha
 
     def _rebuild(self) -> None:
-        from repro.kernels.ops import quantize_table
-        with trace.span("table_rebuild", cat="tables") as _sp:
-            self._rebuild_impl(quantize_table, _sp)
+        """Synchronous (serving-thread) table rebuild — the fallback when no
+        background build matches the current state."""
+        with trace.span("table_rebuild", cat="tables") as sp:
+            side = self._side_packs(self.packs, self._stacks, self.fused)
+            slots, tables, meta = self._build_tables(side, self.packs,
+                                                     self._qpacks)
+            sp.set(**meta)
+        self._slots, self._tables = slots, tables
+        self._dirty = False
+        self._structural = False
 
-    def _rebuild_impl(self, quantize_table, _sp) -> None:
-        side = self._side_packs()
+    def _build_tables(self, side, packs, qpacks):
+        """Pack side deltas into device tables. Pure w.r.t. engine state
+        (reads only the passed snapshots + immutable ``_shapes``), so the
+        sync rebuild and the async build produce identical tables from
+        identical inputs. Returns (slots, tables, meta)."""
+        from repro.kernels.ops import quantize_table
         order = sorted(side, key=lambda t: t if isinstance(t, str)
                        else tenant_key(t))
-        self._slots = {name: i for i, name in enumerate(order)}
+        slots = {name: i for i, name in enumerate(order)}
         paths = sorted({p for pk in side.values() for p in pk.entries})
         tables: Dict[str, dict] = {}
-        A = max(len(side), 1)
+        pad = self.slot_pad
+        A = max(-(-max(len(side), 1) // pad) * pad, 1)
         int8 = self.table_dtype == "int8"
         for path in paths:
             shape = self._shapes[path]
@@ -321,8 +368,8 @@ class MultiTenantEngine:
             for name, pk in side.items():
                 if path not in pk.entries:
                     continue
-                s = self._slots[name]
-                direct = self._quant_direct(name, pk, path)
+                s = slots[name]
+                direct = self._quant_direct(name, pk, path, packs, qpacks)
                 if direct is not None:       # store int8 -> table int8, 1:1
                     idxf, vq, sc = direct
                     idxf = np.asarray(idxf).reshape(nl, -1)
@@ -350,18 +397,138 @@ class MultiTenantEngine:
             if int8:
                 entry["scale"] = jnp.asarray(scale.reshape(tuple(lead) + (A,)))
             tables[path] = entry
-        self._tables = tables
-        self._dirty = False
-        _sp.set(tenants=len(side), paths=len(tables),
-                bytes=sum(int(x.nbytes) for t in tables.values()
-                          for x in t.values()))
+        meta = {"tenants": len(side), "paths": len(tables),
+                "bytes": sum(int(x.nbytes) for t in tables.values()
+                             for x in t.values())}
+        return slots, tables, meta
+
+    # ------------------------------------------------------------------
+    # Async table builds (overlap rebuild + H2D with in-flight decode)
+    # ------------------------------------------------------------------
+
+    def tables_ready(self) -> bool:
+        """True when serving can proceed without a synchronous rebuild —
+        tables are clean, or a completed background build was adopted."""
+        if self._dirty:
+            self.poll_async_build()
+        return not self._dirty
+
+    def kick_async_build(self) -> bool:
+        """Start rebuilding the device tables on a background worker so the
+        table pack + H2D upload overlap whatever the serving thread does
+        next (the in-flight decode step). Snapshot semantics: the build
+        captures the tenant/fused state at submit; any later
+        ``_mark_dirty`` makes it stale and it is discarded at poll time.
+        With a deferred fused transition pending, the build targets the
+        *post-transition* state. Returns True when tables are clean or a
+        matching build is in flight; False means a stale build is still
+        running (back off and kick again next step)."""
+        if not self._dirty and self._pending is None:
+            return True
+        if self._build_fut is not None:
+            ep, fut, trans = self._build_fut
+            if not fut.done():
+                return ep == self._epoch and trans is self._pending
+            self.poll_async_build()
+            if not self._dirty and self._pending is None:
+                return True
+        epoch = self._epoch
+        pending = self._pending
+        packs, qpacks = dict(self.packs), dict(self._qpacks)
+        stacks, fused = dict(self._stacks), self.fused
+        if pending is not None:
+            fused = (normalize_tenant(pending.promote)
+                     if pending.promote is not None else None)
+        if self._build_pool is None:
+            self._build_pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="shira-tables")
+
+        def job():
+            with trace.span("prefetch.h2d", cat="tables") as sp:
+                side = self._side_packs(packs, stacks, fused)
+                slots, tables, meta = self._build_tables(side, packs, qpacks)
+                # land the uploads on the worker: the serving thread must
+                # never pay this build's device sync
+                jax.block_until_ready([x for t in tables.values()
+                                       for x in t.values()])
+                sp.set(**meta)
+            return slots, tables
+
+        self._build_fut = (epoch, self._build_pool.submit(job), pending)
+        self.async_builds += 1
+        return True
+
+    def poll_async_build(self) -> bool:
+        """Adopt a completed background build if it still matches the
+        engine state; discard it otherwise. A transition build also
+        dispatches its deferred fuse/unfuse scatter at adoption. Never
+        blocks. Returns True when tables are clean after the poll."""
+        if self._build_fut is None:
+            return not self._dirty
+        ep, fut, trans = self._build_fut
+        if not fut.done():
+            return not self._dirty
+        self._build_fut = None
+        try:
+            slots, tables = fut.result()
+        except Exception:
+            trace.instant("prefetch.h2d_failed", cat="tables")
+            return not self._dirty
+        if ep != self._epoch or trans is not self._pending:
+            self.async_stale += 1
+        elif trans is not None:
+            # apply the deferred transition: the scatter is async-dispatched
+            # (device-ordered before anything that reads the new shared
+            # tree), the matching tables swap in the same host step
+            if trans.promote is not None:
+                self._promote(trans.promote)
+            elif trans.demote is not None:
+                self._demote()
+            self._pending = None
+            self._slots, self._tables = slots, tables
+            self._dirty = False
+            self._structural = False
+            self.async_adopted += 1
+        elif self._dirty:
+            self._slots, self._tables = slots, tables
+            self._dirty = False
+            self._structural = False
+            self.async_adopted += 1
+        else:
+            self.async_stale += 1
+        return not self._dirty
+
+    def _ensure_tables(self) -> None:
+        """Make the tables serve-ready: adopt a finished background build,
+        wait for a matching in-flight one (``prefetch.stall`` — the time
+        async serving failed to hide), or fall back to the synchronous
+        rebuild. Token output is identical on every path: same builder,
+        same inputs."""
+        if not self._dirty:
+            return
+        if not self.poll_async_build():
+            if (self._build_fut is not None
+                    and self._build_fut[0] == self._epoch):
+                with trace.span("prefetch.stall", cat="tables"):
+                    try:
+                        self._build_fut[1].result()
+                    except Exception:
+                        pass
+                self.poll_async_build()
+        if self._dirty:
+            self._rebuild()
+
+    def shutdown(self) -> None:
+        """Join the background build worker (tests / clean teardown)."""
+        pool, self._build_pool = self._build_pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
 
     def table_nbytes(self) -> Dict[str, int]:
         """Device-side adapter-table bytes by component (what multi-tenant
         serving keeps resident in HBM). int8 tables shrink ``vals`` 4x and,
         when the dims fit int16, ``rows``/``cols`` 2x."""
-        if self._dirty:
-            self._rebuild()
+        self._ensure_tables()
         out = {"rows": 0, "cols": 0, "vals": 0, "scale": 0}
         for t in self._tables.values():
             for k in out:
@@ -384,7 +551,7 @@ class MultiTenantEngine:
                                          sign=-1.0)
         self.fused = None
         self.fuse_transitions += 1
-        self._dirty = True
+        self._mark_dirty()
 
     def _promote(self, tenant: Tenant) -> None:
         tenant = normalize_tenant(tenant)
@@ -397,14 +564,30 @@ class MultiTenantEngine:
                                          sign=+1.0)
         self.fused = tenant
         self.fuse_transitions += 1
-        self._dirty = True
+        self._mark_dirty()
 
-    def schedule(self, names: Sequence) -> None:
+    def schedule(self, names: Sequence, defer: bool = False) -> None:
         """Consult the scheduler for this batch's traffic; apply its
-        promote/demote before serving."""
+        promote/demote before serving.
+
+        ``defer=True`` (the async serving engines) does not apply the
+        transition inline: the decision is stashed and the tables for the
+        *post-transition* state are built in the background while serving
+        continues — fully correct — on the current fused state and tables.
+        When that build lands (``poll_async_build``) the fuse/unfuse
+        scatter is dispatched and the tables swap atomically, so a
+        promotion costs the in-flight decode nothing."""
         if self.scheduler is None:
             return
         d = self.scheduler.observe([normalize_tenant(n) for n in names])
+        if d.promote is None and d.demote is None:
+            return
+        if defer:
+            # replacing an unapplied decision is safe: _promote/_demote
+            # always transition from the engine's CURRENT fused state, and
+            # the old pending build dies on the identity check at poll time
+            self._pending = d
+            return
         if d.promote is not None:
             self._promote(d.promote)
         elif d.demote is not None:
@@ -414,7 +597,26 @@ class MultiTenantEngine:
     # Forward passes
     # ------------------------------------------------------------------
 
-    def ids_for(self, names: Sequence) -> jax.Array:
+    def ids_covered(self, names: Sequence) -> bool:
+        """True when the current tables can still serve these tenants
+        correctly even though a rebuild is pending: only *additive* changes
+        (new tenants) happened since the last build, and every requested
+        tenant already has a slot. The async serving engines use this to
+        keep decoding hot tenants off stale tables while a cold adapter's
+        rebuild runs in the background."""
+        if not self._dirty:
+            return True
+        if self._structural:
+            return False
+        for t in (normalize_tenant(n) for n in names):
+            if t is None:
+                if self.fused is not None and _BASE_SLOT not in self._slots:
+                    return False
+            elif t != self.fused and t not in self._slots:
+                return False
+        return True
+
+    def ids_for(self, names: Sequence, stale_ok: bool = False) -> jax.Array:
         norm = [normalize_tenant(n) for n in names]
         self._batch_no += 1
         for t in norm:
@@ -424,7 +626,7 @@ class MultiTenantEngine:
                                    f"{m!r}")
             if t is not None and not isinstance(t, str):
                 if t not in self._stacks:
-                    self._dirty = True       # new stack -> needs a slot
+                    self._mark_dirty(additive=True)  # new stack: needs a slot
                 self._stacks[t] = self._batch_no
         # retire stacks that left the traffic mix, or table slots (and
         # rebuild work per new ad-hoc combination) grow without bound
@@ -432,9 +634,10 @@ class MultiTenantEngine:
                   if t != self.fused
                   and self._batch_no - used > self.stack_ttl]:
             del self._stacks[t]
-            self._dirty = True
-        if self._dirty:
-            self._rebuild()
+            # removal: remaining tenants' rows stay valid until the rebuild
+            self._mark_dirty(additive=True)
+        if not (stale_ok and self.ids_covered(norm)):
+            self._ensure_tables()
         ids = []
         for t in norm:
             if t == self.fused or (t is BASE and self.fused is None):
@@ -445,10 +648,12 @@ class MultiTenantEngine:
                 ids.append(self._slots[t])
         return jnp.asarray(ids, jnp.int32)
 
-    def wrapped_params(self, ids: jax.Array):
-        """The shared tree with side-delta bundles at every adapted weight."""
-        if self._dirty:
-            self._rebuild()
+    def wrapped_params(self, ids: jax.Array, stale_ok: bool = False):
+        """The shared tree with side-delta bundles at every adapted weight.
+        ``stale_ok`` trusts the caller's ``ids_for(..., stale_ok=True)``
+        coverage check and skips the rebuild barrier."""
+        if not stale_ok:
+            self._ensure_tables()
         tables = self._tables
 
         def walk(tree, prefix):
