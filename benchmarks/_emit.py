@@ -59,6 +59,8 @@ GATED_METRICS = {
     "slo_load": ("tokens_per_s", "goodput_tok_s", "completed",
                  "prefetch_hit_rate", "cold_ttft_p99_gain",
                  "overlap_realized_frac"),
+    "train_efficiency": ("adapters_per_gb_f32", "adapters_per_gb_int8",
+                         "moment_bytes_ratio", "concurrency_speedup"),
 }
 
 # lower-is-better counterparts (latencies), gateable via "gate_max".
@@ -68,6 +70,8 @@ GATED_MAX_METRICS = {
     "slo_load": ("p50_latency_ms", "p99_latency_ms", "p99_ttft_ms",
                  "slo_violation_rate", "p99_ttft_cold_ms",
                  "prefetch_stall_ms"),
+    "train_efficiency": ("swap_latency_ms", "multi_step_ms_f32",
+                         "multi_step_ms_int8"),
 }
 
 

@@ -1,22 +1,45 @@
-"""Paper App. D Table 6 analog: training memory + speed per adapter type.
+"""Training memory + speed: per-adapter-type table, multi-adapter lane.
 
-Reports (a) optimizer-state + gradient bytes — the component the paper's
-packed implementation shrinks (-16.6% peak GPU memory on LLaMA2-7B), exact
-by construction, and (b) measured step wall-clock on this host for the
-reduced config (relative numbers are the meaningful part on CPU).
+Part 1 (paper App. D Table 6 analog): optimizer-state + gradient bytes per
+adapter method — the component the paper's packed implementation shrinks
+(-16.6% peak GPU memory on LLaMA2-7B) — plus measured step wall-clock for
+the reduced config (relative numbers are the meaningful part on CPU).
+
+Part 2 (the gated lane, ``--json``): the continuous-personalization
+trainer. ``MultiAdapterTrainer`` holds A adapters' values + optimizer
+moments resident per device, so the capacity metric is
+
+  adapters_per_gb_<mode> = how many concurrently-training adapters fit in
+                           1 GB of trainable+optimizer state
+
+for f32 vs int8 moment storage (``training.qstate`` — bytes are exact by
+construction, not sampled), ``moment_bytes_ratio`` (f32/int8 moment bytes,
+~3.9x), and ``swap_latency_ms`` — publish-to-first-token of a versioned
+hot-swap on a live ServingEngine (``gate_max``: a latency ceiling).
+
+  PYTHONPATH=src python benchmarks/train_efficiency.py --smoke --json
 """
 from __future__ import annotations
 
+import argparse
+import os
+import sys
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import _emit  # noqa: E402
 
 from repro.configs import AdapterConfig, RunConfig, TrainConfig, get_smoke_config
 from repro.configs.base import ShapeSpec
 from repro.data import make_batch
 from repro.runtime import Trainer
 from repro.runtime.trainer import TrainerConfig
+from repro.training import MultiAdapterTrainer, multi_batch_iterator
 
 SHAPE = ShapeSpec("bench", 64, 8, "train")
 ARCH = "starcoder2-7b"
@@ -33,10 +56,11 @@ METHODS = [
 
 
 def tree_bytes(tree) -> int:
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+               if x is not None)
 
 
-def main() -> None:
+def method_table() -> None:
     print("method,trainable_mb,opt_state_mb,grad_mb,step_ms")
     for name, acfg in METHODS:
         cfg = get_smoke_config(ARCH)
@@ -59,6 +83,116 @@ def main() -> None:
         t_mb = tree_bytes(state["trainable"]) / 1e6
         o_mb = (tree_bytes(state["mu"]) + tree_bytes(state["nu"])) / 1e6
         print(f"{name},{t_mb:.2f},{o_mb:.2f},{t_mb:.2f},{dt:.1f}")
+
+
+def _moment_bytes(state) -> int:
+    return sum(tree_bytes(state[k])
+               for k in ("mu", "nu", "mu_scale", "nu_scale"))
+
+
+def multi_adapter_lane(args) -> dict:
+    """The gated metrics: multi-adapter state capacity + step time."""
+    from repro.data import TaskSpec
+    shape = (ShapeSpec("tiny", 8, 8, "train") if args.smoke else SHAPE)
+    run = RunConfig(
+        model=get_smoke_config(ARCH), shape=shape,
+        adapter=AdapterConfig(kind="shira", mask="rand", sparsity=0.95),
+        train=TrainConfig(learning_rate=1e-2, total_steps=100,
+                          warmup_steps=2))
+    A = args.adapters
+    names = [f"u{i}" for i in range(A)]
+    metrics, reps = {}, args.reps
+    mb = next(multi_batch_iterator(run.model, shape, 0,
+                                   [TaskSpec(i) for i in range(A)]))
+    batch = {k: jnp.asarray(v) for k, v in mb.items()}
+    mt = None
+    moment_b = {}
+    for mode in ("f32", "int8"):
+        mt = MultiAdapterTrainer(run, names, moments=mode)
+        state = mt.init_state()
+        vals_b = tree_bytes(state["values"])
+        moment_b[mode] = _moment_bytes(state)
+        metrics[f"adapters_per_gb_{mode}"] = (
+            A * 1e9 / (vals_b + moment_b[mode]))
+        step = mt.build_step()
+        state, m = step(state, batch)          # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        metrics[f"multi_step_ms_{mode}"] = (
+            (time.perf_counter() - t0) / reps * 1e3)
+    metrics["moment_bytes_ratio"] = moment_b["f32"] / moment_b["int8"]
+
+    # sequential baseline (informational): one adapter's own step, x A
+    tr = Trainer(run, TrainerConfig())
+    st = tr.init_state()
+    single = tr.build_step()
+    sb = {k: jnp.asarray(v)
+          for k, v in make_batch(run.model, shape, seed=0, step=0).items()}
+    st, m = single(st, sb)
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        st, m = single(st, sb)
+    jax.block_until_ready(m["loss"])
+    single_ms = (time.perf_counter() - t0) / reps * 1e3
+    metrics["concurrency_speedup"] = (
+        A * single_ms / metrics["multi_step_ms_f32"])
+
+    # swap latency: publish a new version against a LIVE engine, measure
+    # publish -> first token on the new version (slot_pad keeps the table
+    # shapes constant, so no recompile rides the measurement)
+    from repro.hub import AdapterStore, ServingEngine
+    packs = mt.export_packs(state)
+    store = AdapterStore(tempfile.mkdtemp(prefix="train-eff-store-"))
+    store.publish(packs[0])
+    eng = ServingEngine(run.model, mt.base, slots=2, cache_size=32,
+                        store=store, slot_pad=4)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, run.model.vocab_size, (5,))
+    f = eng.submit(prompt, "u0", max_tokens=2)
+    eng.run()                                  # warm every jit path
+    assert f.adapter == "u0@1"
+    swaps = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        store.publish(packs[0])
+        f = eng.submit(prompt, "u0", max_tokens=1)
+        eng.step()                             # admit + prefill + retire old
+        swaps.append((time.perf_counter() - t0) * 1e3)
+        assert f.done()
+    metrics["swap_latency_ms"] = min(swaps)
+    eng.shutdown(include_store=True)
+    return metrics
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI-class machines)")
+    ap.add_argument("--adapters", type=int, default=3)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--skip-table", action="store_true",
+                    help="only the multi-adapter lane (faster)")
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH", help="write BENCH_train_efficiency.json "
+                    "(or PATH) with the _emit schema")
+    args = ap.parse_args()
+
+    if not args.skip_table and args.json is None:
+        method_table()
+    metrics = multi_adapter_lane(args)
+    print(f"\nmulti-adapter lane (A={args.adapters}):")
+    for k in sorted(metrics):
+        print(f"  {k}: {metrics[k]:.2f}")
+    if args.json is not None:
+        res = _emit.result("train_efficiency", ARCH + "-smoke", metrics,
+                           meta={"smoke": args.smoke,
+                                 "adapters": args.adapters,
+                                 "reps": args.reps})
+        print("wrote", _emit.emit(res, args.json or None))
 
 
 if __name__ == "__main__":

@@ -172,3 +172,21 @@ class CheckpointManager:
         steps = self.steps()
         for s in steps[:-self.keep]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        # Uncommitted step dirs older than the oldest kept checkpoint are
+        # orphans: a ``save_adapter`` whose committing ``save`` never ran
+        # (preemption between the two). They hold per-step adapter_*.shpk
+        # artifacts, so keep-K pruning must cover them or the root grows
+        # by one stale pack dir per preempted save. Newer uncommitted dirs
+        # stay — they may be a save in progress.
+        kept = steps[-self.keep:]
+        floor = kept[0] if kept else None
+        for d in os.listdir(self.root):
+            if not d.startswith("step_"):
+                continue
+            try:
+                s = int(d.split("_")[1])
+            except ValueError:
+                continue
+            committed = os.path.exists(os.path.join(self.root, d, "COMMITTED"))
+            if not committed and floor is not None and s < floor:
+                shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)

@@ -53,6 +53,27 @@ def tenant_key(name: Tenant) -> str:
     return "" if name is None else "+".join(tenant_members(name))
 
 
+def split_version(name: str) -> Tuple[str, Optional[int]]:
+    """Parse a versioned adapter id: ``"persona@3" -> ("persona", 3)``.
+
+    Unversioned ids (no ``@``, or a non-numeric suffix — ``@`` is legal in
+    plain adapter names) come back as ``(name, None)``. The versioned-id
+    scheme is how continuous personalization publishes retrained adapters:
+    ``AdapterStore.publish`` assigns monotonically increasing versions per
+    base name, lookups of the bare name resolve newest-wins, and in-flight
+    serving requests stay pinned to the concrete ``name@v`` they resolved
+    at submit time."""
+    base, sep, v = name.rpartition("@")
+    if sep and base and v.isdigit():
+        return base, int(v)
+    return name, None
+
+
+def versioned_id(base: str, version: int) -> str:
+    """The canonical id for one published version of an adapter."""
+    return f"{base}@{int(version)}"
+
+
 @dataclass
 class SwitchStats:
     name: str

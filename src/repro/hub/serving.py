@@ -72,7 +72,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis import trace
-from repro.core.switching import FusedLRU, Tenant, normalize_tenant
+from repro.core.switching import (FusedLRU, Tenant, normalize_tenant,
+                                  split_version, tenant_members)
 from repro.models import lm
 from repro.serving.multitenant import MultiTenantEngine
 
@@ -140,9 +141,10 @@ def _prefix_salt(adapter: Tenant) -> bytes:
 
 def _resolve_adapter(engine: MultiTenantEngine, adapter: Tenant) -> Tenant:
     """Normalize + validate a request's tenant, lazily pulling members from
-    the attached AdapterStore."""
-    adapter = normalize_tenant(adapter)
-    from repro.core.switching import tenant_members
+    the attached AdapterStore. Bare names resolve to the store's newest
+    published version first (``engine.resolve``), so the returned tenant
+    holds concrete ``name@v`` ids."""
+    adapter = normalize_tenant(engine.resolve(normalize_tenant(adapter)))
     for m in tenant_members(adapter):
         if m not in engine.packs:
             store = engine.store
@@ -161,6 +163,59 @@ class _EngineCommon:
     def register(self, pack) -> None:
         self.engine.register(pack)
 
+    # -- versioned hot-swap --------------------------------------------
+    #
+    # Requests are pinned to the adapter *version* they resolved to at
+    # submit (``_prepare_adapter``): ``_vpins`` counts in-flight requests
+    # per ``name@v`` and the store's own inflight refcount keeps the pack
+    # eviction-proof while pinned. When the last request on a superseded
+    # version drains, ``_evict_stale`` retires it from the engine tables
+    # and the store's resident tier — the hot-swap completes without ever
+    # touching an in-flight request's weights.
+
+    def _pin_versions(self, fut) -> None:
+        store = self.engine.store
+        fut._vpins = []
+        if store is None or not hasattr(store, "pin_use"):
+            return
+        for m in tenant_members(fut.adapter):
+            if split_version(m)[1] is None:
+                continue                 # unversioned: nothing to retire
+            store.pin_use(m)
+            self._vpins[m] = self._vpins.get(m, 0) + 1
+            fut._vpins.append(m)
+
+    def _unpin_versions(self, fut) -> None:
+        store = self.engine.store
+        for m in getattr(fut, "_vpins", ()):
+            left = self._vpins.get(m, 0) - 1
+            if left > 0:
+                self._vpins[m] = left
+            else:
+                self._vpins.pop(m, None)
+            store.unpin_use(m)
+        fut._vpins = []
+        self._evict_stale()
+
+    def _evict_stale(self) -> None:
+        """Retire every registered ``name@v`` that is both superseded (the
+        store has published a newer version) and drained (no in-flight
+        request pinned to it)."""
+        store = self.engine.store
+        if store is None or not hasattr(store, "latest_version"):
+            return
+        for name in list(self.engine.packs):
+            base, v = split_version(name)
+            if v is None:
+                continue
+            latest = store.latest_version(base)
+            if latest is None or latest <= v or self._vpins.get(name, 0):
+                continue
+            self.engine.unregister(name)
+            store.evict(name)
+            trace.instant("hotswap.evict", cat="store", name=name,
+                          superseded_by=latest)
+
     # -- async prefetch pipeline ---------------------------------------
     #
     # With ``async_prefetch=True`` a cold request's adapter starts loading
@@ -176,9 +231,13 @@ class _EngineCommon:
         """Submit-side adapter resolution. Sync mode registers (and
         disk-loads) inline, exactly as before; async mode only *starts*
         the loads and hands the handles to the queued request. Returns
-        (normalized adapter, handles, cold)."""
-        adapter = normalize_tenant(adapter)
-        from repro.core.switching import tenant_members
+        (normalized adapter, handles, cold). Version resolution happens
+        HERE, at arrival: bare names map to the store's newest published
+        version, and that concrete ``name@v`` rides the request's future
+        for its whole lifetime — a publish mid-stream never moves an
+        in-flight request."""
+        adapter = normalize_tenant(self.engine.resolve(
+            normalize_tenant(adapter)))
         store = self.engine.store
         members = tenant_members(adapter)
         cold = any(m not in self.engine.packs
@@ -252,6 +311,7 @@ class _EngineCommon:
                 p.handles = []
                 fut.cancelled = True
                 fut._done = True
+                self._unpin_versions(fut)
                 trace.instant("prefetch.cancel", cat="store", rid=fut.rid)
                 return True
         return False
@@ -325,6 +385,7 @@ class ServingEngine(_EngineCommon):
         self._last = np.zeros((slots,), np.int32)     # last generated token
         self._queue: "deque[_Pending]" = deque()
         self._rid = 0
+        self._vpins: Dict[str, int] = {}   # name@v -> in-flight requests
         self.step_count = 0
         self.tokens_out = 0
         self.decode_slot_waste = 0    # idle-lane decode steps (utilization)
@@ -358,6 +419,7 @@ class ServingEngine(_EngineCommon):
         fut.cold = cold
         fut.submit_time = t_sub
         self._rid += 1
+        self._pin_versions(fut)
         self._queue.append(_Pending(fut, prompt, eos_id, handles))
         return fut
 
@@ -380,6 +442,7 @@ class ServingEngine(_EngineCommon):
         self._active[slot] = None
         self._pos[slot] = 0
         self._last[slot] = 0
+        self._unpin_versions(p.fut)
 
     def _admit(self, slot: int, p: _Pending) -> None:
         with trace.span("admit", rid=p.fut.rid, slot=slot,
@@ -502,6 +565,7 @@ class PagedServingEngine(_EngineCommon):
         self._active: List[Optional[_PagedRequest]] = [None] * slots
         self._queue: "deque[_PagedRequest]" = deque()
         self._rid = 0
+        self._vpins: Dict[str, int] = {}   # name@v -> in-flight requests
         self.step_count = 0
         self.tokens_out = 0
         self.decode_slot_waste = 0
@@ -559,6 +623,7 @@ class PagedServingEngine(_EngineCommon):
         fut.cold = cold
         fut.submit_time = t_sub
         self._rid += 1
+        self._pin_versions(fut)
         self._queue.append(_PagedRequest(fut, prompt, eos_id, need, nblk,
                                          handles))
         return fut
@@ -628,6 +693,7 @@ class PagedServingEngine(_EngineCommon):
         self._bt[slot, :] = 0
         self._pos[slot] = 0
         self._last[slot] = 0
+        self._unpin_versions(r.fut)
 
     def _prefill_step(self, slot: int) -> None:
         from repro.serving.kvcache import pages_for

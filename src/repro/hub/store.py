@@ -61,6 +61,7 @@ from typing import Dict, List, Optional, Union  # noqa: F401 (Union: annot.)
 
 from repro.analysis import trace
 from repro.core.adapters import AdapterPack
+from repro.core.switching import split_version, versioned_id
 from repro.hub.packio import (QuantPack, load_pack, peek_pack,
                               quantize_pack, save_pack)
 
@@ -138,6 +139,7 @@ class AdapterStore:
         self.staging_bytes = staging_bytes
         self.workers = max(int(workers), 1)
         self._paths: Dict[str, Optional[str]] = {}    # id -> file (None = mem)
+        self._latest: Dict[str, int] = {}             # base name -> newest v
         self._pinned: set = set()
         # id -> resident AdapterPack | QuantPack, LRU order (oldest first)
         self._resident: "OrderedDict[str, Union[AdapterPack, QuantPack]]" \
@@ -172,6 +174,7 @@ class AdapterStore:
             with self._lock:
                 self._paths[pack.name] = None
                 self._pinned.add(pack.name)           # nothing to reload from
+                self._note_version(pack.name)
                 self._admit(pack.name, form)
             return pack.name
         path = os.path.join(self.root, f"{pack.name}.shpk")
@@ -180,6 +183,7 @@ class AdapterStore:
             self._paths[pack.name] = path
             if pin:
                 self._pinned.add(pack.name)
+            self._note_version(pack.name)
             self._resident.pop(pack.name, None)       # re-add replaces
             self._staging.pop(pack.name, None)
         return pack.name
@@ -192,9 +196,76 @@ class AdapterStore:
             self._paths[name] = path
             if pin:
                 self._pinned.add(name)
+            self._note_version(name)
             self._resident.pop(name, None)
             self._staging.pop(name, None)
         return name
+
+    # ------------------------------------------------------------------
+    # Versioned publish / newest-wins resolution
+    # ------------------------------------------------------------------
+    # The continuous-personalization loop republishes a retrained adapter
+    # under the same logical name. Each publish gets a fresh immutable id
+    # ``base@v`` (monotonic per base); lookups of the bare name resolve to
+    # the newest version, while anything already holding a concrete
+    # ``base@v`` id keeps reading exactly that version — which is how the
+    # serving engines pin in-flight requests across a hot-swap.
+
+    def _note_version(self, name: str) -> None:
+        # caller holds self._lock
+        base, v = split_version(name)
+        if v is not None and v > self._latest.get(base, 0):
+            self._latest[base] = v
+
+    def publish(self, pack: AdapterPack, values: str = "f32",
+                pin: bool = False) -> str:
+        """Register ``pack`` as the next version of its (base) name.
+
+        Returns the versioned id ``name@v``. A pack whose name is already
+        versioned publishes the *next* version of its base name."""
+        base, _ = split_version(pack.name)
+        with self._lock:
+            v = self._latest.get(base, 0) + 1
+            self._latest[base] = v            # reserve against racing publish
+        vid = versioned_id(base, v)
+        self.add(AdapterPack(name=vid, entries=pack.entries,
+                             alpha=pack.alpha), values=values, pin=pin)
+        trace.instant("store.publish", cat="store", name=vid)
+        return vid
+
+    def resolve(self, name: str) -> str:
+        """Newest-wins id resolution: a bare name with published versions
+        resolves to ``name@latest``; versioned (or unversioned-only) names
+        come back unchanged."""
+        base, v = split_version(name)
+        if v is not None:
+            return name
+        with self._lock:
+            latest = self._latest.get(name)
+        return versioned_id(name, latest) if latest else name
+
+    def latest_version(self, base: str) -> Optional[int]:
+        with self._lock:
+            return self._latest.get(base)
+
+    def versions(self, base: str) -> List[str]:
+        """Registered versioned ids of ``base``, oldest first."""
+        with self._lock:
+            vs = [(v, n) for n in self._paths
+                  for b, v in [split_version(n)] if b == base and v]
+        return [n for _, n in sorted(vs)]
+
+    def pin_use(self, name: str) -> str:
+        """Refcounted eviction pin for a version an engine is serving from
+        (the same pin prefetch handles use — ``evict`` refuses pinned
+        packs). Returns the concrete id pinned; pass it to
+        ``unpin_use`` when the last in-flight request drains."""
+        name = self.resolve(name)
+        self._pin_inflight(name)
+        return name
+
+    def unpin_use(self, name: str) -> None:
+        self._unpin_inflight(name)
 
     # ------------------------------------------------------------------
     # Lookup
@@ -204,18 +275,21 @@ class AdapterStore:
         return sorted(self._paths)
 
     def __contains__(self, name: str) -> bool:
-        return name in self._paths
+        return name in self._paths or name in self._latest
 
     def is_resident(self, name: str) -> bool:
         """Host-RAM-tier hit test (no LRU touch) — what the serving engines
         use to stamp a request cold/hot at submit time."""
+        name = self.resolve(name)
         with self._lock:
             return name in self._resident
 
     def get(self, name: str) -> AdapterPack:
         """Immutable pack handle; loads from disk (and evicts LRU residents
         past the byte budget) on a miss. Quantized packs dequantize at
-        this boundary — through the staging tier when one is configured."""
+        this boundary — through the staging tier when one is configured.
+        A bare name resolves newest-wins (see ``resolve``)."""
+        name = self.resolve(name)
         with self._lock:
             staged = self._staging.get(name)
             if staged is not None:
@@ -237,6 +311,7 @@ class AdapterStore:
         from; f32/bf16 packs come back as plain ``AdapterPack``s. Same
         residency/LRU accounting as ``get``. Joins an in-flight prefetch
         of the same name instead of reading the file twice."""
+        name = self.resolve(name)
         if name not in self._paths:
             raise KeyError(f"unknown adapter {name!r}; registered: "
                            f"{self.names()}")
@@ -278,6 +353,7 @@ class AdapterStore:
         tier exist) runs on the store's worker pool, recorded as a
         ``prefetch.disk`` span on that worker's tid. The adapter is
         pinned against eviction until the handle is released."""
+        name = self.resolve(name)
         if name not in self._paths:
             raise KeyError(f"unknown adapter {name!r}; registered: "
                            f"{self.names()}")
@@ -448,6 +524,7 @@ class AdapterStore:
     def evict(self, name: str) -> bool:
         """Drop a resident form explicitly (the file stays registered).
         Refused while the adapter has an in-flight load or handle."""
+        name = self.resolve(name)
         with self._lock:
             if (name in self._resident
                     and self._paths.get(name) is not None

@@ -17,7 +17,7 @@ from repro.kernels.flash_decode import flash_decode_blocks
 from repro.kernels.masked_update import masked_update_tiles
 from repro.kernels.scatter_apply import scatter_apply_tiles
 from repro.kernels.sidedelta import sidedelta_rows
-from repro.kernels.sparse_adamw import sparse_adamw_blocks
+from repro.kernels.sparse_adamw import sparse_adamw_blocks, sparse_adamw_rows
 
 
 # ---------------------------------------------------------------------------
@@ -152,6 +152,44 @@ def sparse_adamw(values, grads, mu, nu, step, *, lr=1e-3, b1=0.9, b2=0.999,
                                   block=block, interpret=interpret)
     if pad:
         v, m, u = v[:k], m[:k], u[:k]
+    return v, m, u
+
+
+def _adamw_scalars(step, lr, b1, b2, eps, wd):
+    stepf = step.astype(jnp.float32)
+    return jnp.stack([
+        jnp.asarray(lr, jnp.float32), jnp.asarray(b1, jnp.float32),
+        jnp.asarray(b2, jnp.float32), jnp.asarray(eps, jnp.float32),
+        jnp.asarray(wd, jnp.float32),
+        1.0 - jnp.asarray(b1, jnp.float32) ** stepf,
+        1.0 - jnp.asarray(b2, jnp.float32) ** stepf,
+        jnp.zeros((), jnp.float32)])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b1", "b2", "eps", "wd", "block",
+                                    "interpret"))
+def sparse_adamw_batched(values, grads, mu, nu, step, *, lr, b1=0.9,
+                         b2=0.999, eps=1e-8, wd=0.0, mu_scale=None,
+                         nu_scale=None, block=2048, interpret=False):
+    """Batched fused AdamW over (R, K) row-stacked packed values.
+
+    Rows are independent (adapter, leaf) vectors, so A adapters update in
+    one kernel launch. ``mu``/``nu`` may be stored f32, bf16, or int8 with
+    per-row ``mu_scale``/``nu_scale`` (see ``sparse_adamw_rows`` for the
+    int8 encoding); updated moments are always returned f32 — the caller
+    re-encodes. ``lr`` is traced (it follows a schedule); ``step`` is the
+    1-based optimizer step used for bias correction."""
+    r, k = values.shape
+    pad = (-k) % block
+    if pad:
+        z = lambda x: jnp.pad(x, ((0, 0), (0, pad)))
+        values, grads, mu, nu = z(values), z(grads), z(mu), z(nu)
+    scalars = _adamw_scalars(step, lr, b1, b2, eps, wd)
+    v, m, u = sparse_adamw_rows(values, grads, mu, nu, mu_scale, nu_scale,
+                                scalars, block=block, interpret=interpret)
+    if pad:
+        v, m, u = v[:, :k], m[:, :k], u[:, :k]
     return v, m, u
 
 

@@ -282,7 +282,7 @@ def _sidedelta_xla(x: jax.Array, rows: jax.Array, cols: jax.Array,
 def sidedelta_rows(x: jax.Array, rows: jax.Array, cols: jax.Array,
                    vals: jax.Array, ids: jax.Array, m: int,
                    *, scale: Optional[jax.Array] = None,
-                   interpret: bool = False,
+                   interpret=False,
                    bm: Optional[int] = None, kc: Optional[int] = None,
                    vmem_budget: int = DEFAULT_VMEM_BUDGET) -> jax.Array:
     """x: (B, S, n); rows/cols: (A, K) int32 (or int16) per-adapter
@@ -290,6 +290,12 @@ def sidedelta_rows(x: jax.Array, rows: jax.Array, cols: jax.Array,
     scale: (A,) f32 per-adapter dequant scale (None = 1, i.e. f32 tables);
     ids: (B,) int32 adapter slot per request, -1 = base model.
     Returns delta (B, S, m) f32.
+
+    ``interpret`` selects the execution mode: ``False`` compiles (Pallas on
+    TPU, the XLA twin elsewhere), ``True`` runs the Pallas kernel in
+    interpret mode, and ``"xla"`` forces the XLA twin on every backend —
+    the twin is pure jnp and therefore differentiable w.r.t. ``vals``,
+    which is what the multi-adapter trainer's forward pass relies on.
 
     ``bm``/``kc`` override the tile plan (defaults from ``plan_tiles``
     under ``vmem_budget``)."""
@@ -310,7 +316,8 @@ def sidedelta_rows(x: jax.Array, rows: jax.Array, cols: jax.Array,
         rows = jnp.pad(rows, pad)       # padded entries: (0, 0) with val 0,
         cols = jnp.pad(cols, pad)       # a harmless +0 in the segment sum
         vals = jnp.pad(vals, pad)
-    if not interpret and jax.default_backend() != "tpu":
+    if interpret == "xla" or (
+            not interpret and jax.default_backend() != "tpu"):
         # this jax has no compiled Pallas path off-TPU: run the same tile
         # plan through XLA so compiled-mode CI still exercises it
         return _sidedelta_xla(x, rows, cols, vals, scale, ids, m, bm, kc)

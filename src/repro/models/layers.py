@@ -78,20 +78,23 @@ SIDEDELTA_KEY = "sd.base"
 # discipline as compute_precision): None = auto (Pallas interpret emulation
 # off-TPU, compiled Mosaic on TPU); True/False force it. interpret=False
 # off-TPU compiles the kernel's tile plan through XLA — what CPU CI uses to
-# guard the tiling/masking logic against TPU-only lowering bugs.
-SIDEDELTA_INTERPRET: Optional[bool] = None
+# guard the tiling/masking logic against TPU-only lowering bugs. "xla"
+# forces the pure-jnp XLA twin on every backend; the twin is differentiable
+# w.r.t. the value tables, which the multi-adapter trainer's forward needs.
+SIDEDELTA_INTERPRET = None
 
 
-def sidedelta_interpret() -> bool:
+def sidedelta_interpret():
     if SIDEDELTA_INTERPRET is None:
         return jax.default_backend() != "tpu"
     return SIDEDELTA_INTERPRET
 
 
 @contextlib.contextmanager
-def sidedelta_backend(interpret: Optional[bool]):
-    """Temporarily force the sidedelta kernel mode. Jitted closures must be
-    *traced* inside the scope — the flag is read at trace time."""
+def sidedelta_backend(interpret):
+    """Temporarily force the sidedelta kernel mode (True, False, or "xla").
+    Jitted closures must be *traced* inside the scope — the flag is read at
+    trace time."""
     global SIDEDELTA_INTERPRET
     prev = SIDEDELTA_INTERPRET
     SIDEDELTA_INTERPRET = interpret

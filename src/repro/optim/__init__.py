@@ -1,2 +1,2 @@
 from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,  # noqa: F401
-                               global_norm, lr_schedule)
+                               batched_global_norm, global_norm, lr_schedule)

@@ -44,6 +44,19 @@ def global_norm(tree) -> jax.Array:
     return jnp.sqrt(jnp.sum(jnp.stack(leaves))) if leaves else jnp.zeros(())
 
 
+def batched_global_norm(tree, batch: int) -> jax.Array:
+    """Per-row global norms for a pytree whose leaves all carry the same
+    leading stacked axis of size ``batch`` — the multi-adapter trainer's
+    per-adapter gradient clip uses this to reproduce exactly the norm each
+    adapter's grads would have in its own single-adapter run."""
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32).reshape(batch, -1)),
+                      axis=1)
+              for x in jax.tree.leaves(tree)]
+    if not leaves:
+        return jnp.zeros((batch,))
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves, axis=0), axis=0))
+
+
 def adamw_update(grads, state: AdamWState, trainable, tcfg: TrainConfig,
                  lr: jax.Array) -> Tuple[Any, AdamWState, dict]:
     gnorm = global_norm(grads)

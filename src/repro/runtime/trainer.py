@@ -185,3 +185,20 @@ class Trainer:
             return core.pack_from_delta(name, self.base, state["trainable"],
                                         self.acfg)
         raise ValueError(f"pack export is for SHiRA; kind={self.acfg.kind}")
+
+    def publish(self, store, state, name: str = "adapter", *,
+                step: Optional[int] = None, values: str = "f32") -> str:
+        """Export the current adapter and push it into ``store`` as a fresh
+        version (``name@v`` — ``AdapterStore.publish``). When the trainer
+        checkpoints, the versioned pack is also snapshotted into the step
+        dir (committed by the next ``ckpt.save``). Live serving engines
+        resolve bare names newest-wins, so this is the hot-swap trigger."""
+        from repro.analysis import trace
+        pack = self.export_pack(state, name)
+        with trace.span("publish.swap", cat="train", name=name):
+            vid = store.publish(pack, values=values)
+            if self.ckpt is not None:
+                s = int(state["step"]) if step is None else step
+                self.ckpt.save_adapter(s, core.AdapterPack(
+                    vid, pack.entries, pack.alpha), values=values)
+        return vid

@@ -258,6 +258,50 @@ class MultiTenantEngine:
             self._qpacks[pack.name] = qp
         self._mark_dirty(additive=brand_new)
 
+    def unregister(self, name: str) -> bool:
+        """Drop a registered adapter (hot-swap retirement: a superseded
+        ``name@v`` whose in-flight requests have drained). If the adapter
+        is fused — alone or inside the fused stack — it is demoted first
+        so the shared base returns to clean weights. Removal dirt is
+        *additive*: like stack-TTL retirement, the remaining tenants'
+        table rows stay valid until the rebuild, so serving may keep
+        decoding them off the old tables. Returns False if unknown."""
+        if name not in self.packs:
+            return False
+        if name in tenant_members(self.fused):
+            self._demote()
+            if (self.scheduler is not None
+                    and name in tenant_members(self.scheduler.fused)):
+                self.scheduler.fused = None
+        del self.packs[name]
+        self._qpacks.pop(name, None)
+        self._qtables.pop(name, None)
+        for t in [t for t in self._stacks if name in tenant_members(t)]:
+            del self._stacks[t]
+        if self.scheduler is not None:
+            for t in [t for t in self.scheduler.share
+                      if name in tenant_members(t)]:
+                self.scheduler.share.pop(t, None)
+                self.scheduler.last_used.pop(t, None)
+        self._mark_dirty(additive=True)
+        return True
+
+    def resolve(self, name):
+        """Map a tenant's members through the attached store's versioned-id
+        resolution (bare ``name`` -> newest ``name@v``). Identity without a
+        store. Request-level engines (``repro.hub``) call this at submit so
+        a request is pinned to the version that was newest when it arrived,
+        even if a newer one is published mid-stream."""
+        if self.store is None or not hasattr(self.store, "resolve"):
+            return name
+        members = tenant_members(name)
+        if not members:
+            return name
+        resolved = tuple(self.store.resolve(m) for m in members)
+        if resolved == members:
+            return name
+        return resolved[0] if isinstance(name, str) else resolved
+
     def _tenants(self) -> set:
         """Side-served tenants: every registered adapter singly, plus every
         multi-adapter stack a request has named."""

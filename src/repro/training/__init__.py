@@ -1,0 +1,6 @@
+"""Continuous personalization: concurrent multi-adapter SHiRA training
+with quantized optimizer state, closed into live serving via versioned
+publish + hot-swap. See training/README.md for the loop's contract."""
+from repro.training.multi import (MultiAdapterTrainer,  # noqa: F401
+                                  multi_batch_iterator)
+from repro.training import qstate  # noqa: F401

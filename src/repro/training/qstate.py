@@ -1,0 +1,82 @@
+"""Quantized optimizer-moment storage for the multi-adapter trainer.
+
+With A adapters resident per device, optimizer memory is 2 f32 moments per
+packed value — 8 bytes/value on top of the 4-byte value itself. Quantizing
+the EMA moments between steps cuts that to 2 (int8 + per-row scales) or 4
+(bf16) bytes/value, so moment storage stops bounding adapters-per-device.
+
+Storage modes (``moments=``):
+
+  * ``"f32"``  — plain f32, bit-identical to the single-adapter reference
+                 path. The default, and the parity oracle for the others.
+  * ``"bf16"`` — truncation cast. bf16 keeps f32's exponent range, so no
+                 scales are needed; the loss is 16 mantissa bits of EMA
+                 resolution.
+  * ``"int8"`` — symmetric per-row quantization, one f32 scale per
+                 (adapter, leaf-row). ``mu`` is signed: ``q = round(m /
+                 scale)``, ``scale = amax|m| / 127``. ``nu`` is
+                 non-negative with a squared dynamic range, so it is stored
+                 in the *sqrt domain*: ``q = round(sqrt(nu) / scale)``,
+                 ``scale = amax(sqrt(nu)) / 127`` — 8 bits then cover the
+                 same relative range as 16 would linearly. All-zero rows
+                 encode with scale 1.0 so they decode to exact zeros.
+
+Encode/decode are pure jnp (usable inside jit). The fused update kernel
+(``kernels/sparse_adamw.sparse_adamw_rows``) performs the *decode* inline —
+dequant happens in kernel VMEM, not through an f32 round trip in HBM — and
+always emits f32 moments, which ``encode`` re-compresses in the same jitted
+step. The reference (non-fused) path in ``training.multi`` decodes with
+``decode`` and must match the kernel bit-for-bit in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MOMENT_MODES = ("f32", "bf16", "int8")
+
+
+def storage_dtype(mode: str):
+    return {"f32": jnp.float32, "bf16": jnp.bfloat16,
+            "int8": jnp.int8}[mode]
+
+
+def _row_scale(amax: jax.Array) -> jax.Array:
+    return jnp.where(amax > 0, amax / 127.0, 1.0)
+
+
+def encode(moment: jax.Array, mode: str, sqrt_domain: bool = False):
+    """f32 moment -> (stored, scale|None). ``moment``'s trailing axis is the
+    packed K axis; scales are per leading row. ``sqrt_domain`` selects the
+    nu encoding (compress sqrt(nu), decode squares it back)."""
+    if mode == "f32":
+        return moment, None
+    if mode == "bf16":
+        return moment.astype(jnp.bfloat16), None
+    if mode != "int8":
+        raise ValueError(f"unknown moment mode {mode!r}")
+    x = jnp.sqrt(moment) if sqrt_domain else moment
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = _row_scale(amax)
+    q = jnp.clip(jnp.rint(x / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decode(stored: jax.Array, scale, mode: str,
+           sqrt_domain: bool = False) -> jax.Array:
+    """Inverse of ``encode`` — the reference-path dequant (the fused kernel
+    does the same math inline in VMEM)."""
+    if mode == "f32":
+        return stored
+    if mode == "bf16":
+        return stored.astype(jnp.float32)
+    x = stored.astype(jnp.float32) * scale[..., None]
+    return x * x if sqrt_domain else x
+
+
+def moment_bytes_per_value(mode: str, k: int) -> float:
+    """Persistent bytes per packed value for BOTH moments, amortizing the
+    per-row f32 scales over a K-length row (int8 only)."""
+    per = {"f32": 4.0, "bf16": 2.0, "int8": 1.0}[mode]
+    scales = (2 * 4.0 / max(k, 1)) if mode == "int8" else 0.0
+    return 2 * per + scales

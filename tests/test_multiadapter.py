@@ -1,0 +1,233 @@
+"""MultiAdapterTrainer: A concurrent finetunes in one jitted step.
+
+Acceptance bars pinned here:
+
+  * Sequential equivalence — adapter ``a`` of a 3-adapter concurrent run
+    tracks its single-adapter ``Trainer`` twin (same init key, same task
+    stream, same base) step for step under f32 compute precision.
+  * Quantized optimizer moments — the fused kernel's inline dequant
+    matches the pure-jnp reference exactly, and int8/bf16 moment storage
+    stays within the documented tolerance of the f32 oracle.
+  * The batched fused kernel IS the single-adapter AdamW math (unit
+    parity against ``optim.adamw_update``'s update rule).
+  * ``multi_batch_iterator`` row blocks are bit-identical to the
+    per-task single streams (what the equivalence contract rides on).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import AdapterConfig, RunConfig, TrainConfig, get_smoke_config
+from repro.configs.base import ShapeSpec
+from repro.data import TaskSpec, batch_iterator
+from repro.models import layers
+from repro.runtime import Trainer
+from repro.runtime.trainer import TrainerConfig
+from repro.training import MultiAdapterTrainer, multi_batch_iterator, qstate
+
+SHAPE = ShapeSpec("tiny", 8, 8, "train")
+
+
+def mk_run(steps=6, lr=1e-2, sparsity=0.95):
+    return RunConfig(model=get_smoke_config("starcoder2-7b"), shape=SHAPE,
+                     adapter=AdapterConfig(kind="shira", mask="rand",
+                                           sparsity=sparsity),
+                     train=TrainConfig(learning_rate=lr, total_steps=steps,
+                                       warmup_steps=2))
+
+
+# ---------------------------------------------------------------------------
+# Data routing
+# ---------------------------------------------------------------------------
+
+def test_multi_batch_iterator_blocks_match_single_streams():
+    run = mk_run()
+    A, n = 3, SHAPE.global_batch
+    tasks = [TaskSpec(a) for a in range(A)]
+    multi = multi_batch_iterator(run.model, SHAPE, 0, tasks)
+    singles = [batch_iterator(run.model, SHAPE, seed=0, task=t)
+               for t in tasks]
+    for _ in range(3):
+        mb = next(multi)
+        np.testing.assert_array_equal(
+            mb["ids"], np.repeat(np.arange(A), n))
+        for a, it in enumerate(singles):
+            sb = next(it)
+            for k in sb:
+                np.testing.assert_array_equal(mb[k][a * n:(a + 1) * n], sb[k])
+
+
+# ---------------------------------------------------------------------------
+# Sequential equivalence (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+def test_three_adapter_parity_vs_sequential_trainers():
+    """Adapter a of the concurrent run == Trainer(init_key=a) on task a,
+    step for step. f32 compute precision isolates the math from bf16
+    matmul noise; tolerance covers float summation-order differences."""
+    steps, A = 6, 3
+    run = mk_run(steps=steps)
+    with layers.compute_precision(jnp.float32):
+        mt = MultiAdapterTrainer(run, [f"a{a}" for a in range(A)],
+                                 init_key=0)
+        out = mt.fit(steps, log=None)
+        for a in range(A):
+            tr = Trainer(run, TrainerConfig(), init_key=a,
+                         base_params=mt.base)
+            ref = tr.fit(steps, log=None, batches=batch_iterator(
+                run.model, SHAPE, seed=run.train.seed, task=TaskSpec(a)))
+            np.testing.assert_allclose(
+                [h[f"loss:a{a}"] for h in out["history"]],
+                [h["loss"] for h in ref["history"]],
+                rtol=5e-3, atol=5e-3)
+            # final packed values agree leaf for leaf
+            pack = mt.export_packs(out["state"])[a]
+            ref_pack = tr.export_pack(ref["state"], name=f"a{a}")
+            assert set(pack.entries) == set(ref_pack.entries)
+            for path in pack.entries:
+                np.testing.assert_allclose(
+                    np.asarray(pack.entries[path][1]),
+                    np.asarray(ref_pack.entries[path][1]),
+                    rtol=5e-3, atol=5e-3)
+        # the concurrent run actually learns
+        assert out["history"][-1]["loss"] < out["history"][0]["loss"]
+
+
+# ---------------------------------------------------------------------------
+# Quantized optimizer state
+# ---------------------------------------------------------------------------
+
+def _final_values(run, steps, moments, fused):
+    with layers.compute_precision(jnp.float32):
+        mt = MultiAdapterTrainer(run, ["a0", "a1"], init_key=0,
+                                 moments=moments, fused=fused)
+        out = mt.fit(steps, log=None)
+    flat = [np.asarray(v) for v in jax.tree.leaves(out["state"]["values"])]
+    return np.concatenate([v.ravel() for v in flat])
+
+
+def test_quantized_moments_fused_matches_reference_and_oracle():
+    """Documented tolerances (see training/README.md): fused == reference
+    bit-tight per mode; int8 within 2e-2 and bf16 within 1e-2 of the f32
+    oracle after 8 tiny-scale steps."""
+    steps = 8
+    run = mk_run(steps=steps)
+    oracle = _final_values(run, steps, "f32", fused=True)
+    ref_f32 = _final_values(run, steps, "f32", fused=False)
+    np.testing.assert_allclose(oracle, ref_f32, rtol=1e-5, atol=1e-6)
+    # Quantized modes: single-STEP fused == reference is pinned by the
+    # kernel unit tests below; end-to-end trajectories may differ by
+    # amplified rint-boundary flips, so the multi-step contract is
+    # closeness to the f32 oracle for BOTH implementations.
+    for mode, tol in [("int8", 2e-2), ("bf16", 1e-2)]:
+        fused = _final_values(run, steps, mode, fused=True)
+        ref = _final_values(run, steps, mode, fused=False)
+        np.testing.assert_allclose(fused, oracle, rtol=tol, atol=tol)
+        np.testing.assert_allclose(ref, oracle, rtol=tol, atol=tol)
+
+
+def test_qstate_roundtrip_and_bytes():
+    rng = np.random.default_rng(0)
+    m = jnp.asarray(rng.standard_normal((5, 64)), jnp.float32) * 1e-3
+    nu = jnp.square(m)
+    # f32 is the identity; bf16 keeps 8 mantissa bits
+    st, sc = qstate.encode(m, "f32")
+    assert st is m and sc is None
+    st, sc = qstate.encode(m, "bf16")
+    assert st.dtype == jnp.bfloat16 and sc is None
+    np.testing.assert_allclose(np.asarray(qstate.decode(st, sc, "bf16")),
+                               np.asarray(m), rtol=1 / 128, atol=0)
+    # int8: the symmetric-quantization guarantee is abs error <= half a
+    # quantum (scale/2) per row, NOT a relative bound
+    st, sc = qstate.encode(m, "int8")
+    assert st.dtype == jnp.int8
+    err = np.abs(np.asarray(qstate.decode(st, sc, "int8")) - np.asarray(m))
+    assert np.all(err <= np.asarray(sc)[:, None] * 0.5 + 1e-12)
+    # nu rides the sqrt domain: sqrt(decoded) is within half a quantum of
+    # sqrt(nu) = |m|
+    st, sc = qstate.encode(nu, "int8", sqrt_domain=True)
+    back = np.asarray(qstate.decode(st, sc, "int8", sqrt_domain=True))
+    assert np.all(back >= 0)
+    err = np.abs(np.sqrt(back) - np.abs(np.asarray(m)))
+    assert np.all(err <= np.asarray(sc)[:, None] * 0.5 + 1e-12)
+    # all-zero rows decode to exact zeros under int8
+    z, s = qstate.encode(jnp.zeros((3, 8)), "int8")
+    assert np.all(np.asarray(s) == 1.0)
+    assert np.all(np.asarray(qstate.decode(z, s, "int8")) == 0.0)
+    # the memory claim the benchmark gates: int8 ~4x under f32
+    assert qstate.moment_bytes_per_value("f32", 40) == 8.0
+    assert qstate.moment_bytes_per_value("int8", 40) < 8.0 / 3
+
+
+# ---------------------------------------------------------------------------
+# Fused kernel unit parity
+# ---------------------------------------------------------------------------
+
+def test_sparse_adamw_batched_matches_adamw_math():
+    """One kernel launch over (R, K) rows == the reference AdamW update
+    rule applied row-wise (bias correction from the 1-based step)."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(1)
+    R, K = 6, 96                      # K not a multiple of block: pads
+    v = jnp.asarray(rng.standard_normal((R, K)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((R, K)), jnp.float32)
+    m = jnp.asarray(rng.standard_normal((R, K)), jnp.float32) * 0.1
+    u = jnp.asarray(np.abs(rng.standard_normal((R, K))), jnp.float32) * 0.01
+    lr, b1, b2, eps, wd = 1e-2, 0.9, 0.999, 1e-8, 0.1
+    for step in (1, 7):
+        v2, m2, u2 = ops.sparse_adamw_batched(
+            v, g, m, u, jnp.int32(step), lr=jnp.float32(lr), b1=b1, b2=b2,
+            eps=eps, wd=wd, interpret=True)
+        em = b1 * m + (1 - b1) * g
+        eu = b2 * u + (1 - b2) * g * g
+        mh = em / (1 - b1 ** step)
+        uh = eu / (1 - b2 ** step)
+        ev = v - lr * (mh / (jnp.sqrt(uh) + eps) + wd * v)
+        np.testing.assert_allclose(np.asarray(v2), np.asarray(ev),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(em),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(u2), np.asarray(eu),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_sparse_adamw_batched_int8_dequant_in_kernel():
+    """The kernel's inline int8 dequant == decode-then-update reference."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(2)
+    R, K = 4, 64
+    v = jnp.asarray(rng.standard_normal((R, K)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((R, K)), jnp.float32)
+    mf = jnp.asarray(rng.standard_normal((R, K)), jnp.float32) * 0.1
+    uf = jnp.asarray(np.abs(rng.standard_normal((R, K))), jnp.float32) * 0.01
+    mq, ms = qstate.encode(mf, "int8")
+    uq, us = qstate.encode(uf, "int8", sqrt_domain=True)
+    v2, m2, u2 = ops.sparse_adamw_batched(
+        v, g, mq, uq, jnp.int32(3), lr=jnp.float32(1e-2),
+        mu_scale=ms, nu_scale=us, interpret=True)
+    md = qstate.decode(mq, ms, "int8")
+    ud = qstate.decode(uq, us, "int8", sqrt_domain=True)
+    r2, rm, ru = ops.sparse_adamw_batched(
+        v, g, md, ud, jnp.int32(3), lr=jnp.float32(1e-2), interpret=True)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(r2),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(rm),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(u2), np.asarray(ru),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Guardrails
+# ---------------------------------------------------------------------------
+
+def test_rejects_non_packed_adapters():
+    run = mk_run()
+    bad = RunConfig(model=run.model, shape=SHAPE,
+                    adapter=AdapterConfig(kind="lora", rank=4),
+                    train=run.train)
+    with pytest.raises(ValueError, match="packed-SHiRA"):
+        MultiAdapterTrainer(bad, ["a0"])
+    with pytest.raises(ValueError, match="moments"):
+        MultiAdapterTrainer(run, ["a0"], moments="fp4")

@@ -1,0 +1,246 @@
+"""The personalization loop's serving half: versioned publish + hot-swap.
+
+Acceptance bars pinned here:
+
+  * ``AdapterStore.publish`` assigns monotonically increasing ``name@v``
+    ids; bare names resolve newest-wins, concrete ids resolve to
+    themselves; ``pin_use`` refcounts make a version eviction-proof.
+  * ``CheckpointManager.save_adapter``/``restore_adapter`` round-trip a
+    pack bit-exactly, and keep-K GC prunes per-step ``adapter_*.shpk``
+    artifacts — including orphaned uncommitted step dirs from a save
+    preempted between ``save_adapter`` and ``save``.
+  * Live hot-swap under load: a publish mid-stream moves NEW submissions
+    to the new version while in-flight requests finish on the old one
+    with zero token divergence; the superseded version is evicted from
+    the engine tables and the store's resident tier only after its last
+    request drains.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.adapters import AdapterPack
+from repro.core.switching import split_version, versioned_id
+from repro.hub import AdapterStore, PagedServingEngine, ServingEngine
+from repro.models import lm
+
+from test_hub import synth_pack
+from test_multitenant import make_packs
+
+
+# ---------------------------------------------------------------------------
+# Versioned ids + store publish/resolve
+# ---------------------------------------------------------------------------
+
+def test_split_version():
+    assert split_version("p@3") == ("p", 3)
+    assert split_version("p") == ("p", None)
+    assert split_version("p@x") == ("p@x", None)
+    assert split_version("a@b@2") == ("a@b", 2)
+    assert split_version("@2") == ("@2", None)
+    assert versioned_id("p", 4) == "p@4"
+
+
+def test_store_publish_and_resolve(tmp_path):
+    store = AdapterStore(str(tmp_path / "s"))
+    assert store.resolve("p") == "p"          # unpublished: identity
+    v1 = store.publish(synth_pack(name="p", seed=0))
+    v2 = store.publish(synth_pack(name="p", seed=1))
+    assert (v1, v2) == ("p@1", "p@2")
+    assert store.resolve("p") == "p@2"        # newest wins
+    assert store.resolve("p@1") == "p@1"      # concrete ids are sticky
+    assert store.latest_version("p") == 2
+    assert store.versions("p") == ["p@1", "p@2"]
+    assert "p" in store and "p@1" in store and "p@3" not in store
+    # bare-name lookups land on the newest version's values
+    np.testing.assert_array_equal(
+        np.asarray(store.get("p").entries["embed/emb"][1]),
+        np.asarray(store.get("p@2").entries["embed/emb"][1]))
+    # publishing a pack whose name is already versioned strips the suffix
+    v3 = store.publish(synth_pack(name="p@1", seed=2))
+    assert v3 == "p@3"
+    store.shutdown()
+
+
+def test_store_pin_use_blocks_eviction(tmp_path):
+    store = AdapterStore(str(tmp_path / "s"))
+    store.publish(synth_pack(name="p", seed=0))
+    store.get("p")                            # make the pack resident
+    pinned = store.pin_use("p")               # resolves before pinning
+    assert pinned == "p@1"
+    assert not store.evict("p@1")             # refused while pinned
+    store.unpin_use(pinned)
+    assert store.evict("p@1")
+    assert not store.is_resident("p@1")
+    # the file stays registered: lookups reload from disk
+    assert store.get("p").name == "p@1"
+    store.shutdown()
+
+
+def test_store_register_file_notes_versions(tmp_path):
+    from repro.hub.packio import save_pack
+    path = save_pack(synth_pack(name="q@5", seed=3), str(tmp_path / "q5.shpk"))
+    store = AdapterStore(str(tmp_path / "s"))
+    store.register_file(path)
+    assert store.latest_version("q") == 5
+    assert store.resolve("q") == "q@5"
+    assert store.publish(synth_pack(name="q", seed=4)) == "q@6"
+    store.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Checkpointed adapter artifacts
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_adapter_roundtrip(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    ckpt = CheckpointManager(str(tmp_path / "ck"), keep=2)
+    pack = synth_pack(name="p@1", seed=0)
+    ckpt.save_adapter(7, pack)
+    ckpt.save(7, {"state": {"x": np.arange(3.0)}})
+    assert ckpt.adapters(7) == ["p@1"]
+    back = ckpt.restore_adapter("p@1")        # latest committed step
+    assert back.name == "p@1" and back.alpha == pack.alpha
+    for path in pack.entries:
+        np.testing.assert_array_equal(np.asarray(back.entries[path][0]),
+                                      np.asarray(pack.entries[path][0]))
+        np.testing.assert_array_equal(np.asarray(back.entries[path][1]),
+                                      np.asarray(pack.entries[path][1]))
+    # int8 values survive the round trip within a quantum; the gap-stream
+    # encoding re-sorts indices, so compare scatter (dense) forms
+    from test_hub import dense_of
+    ckpt.save_adapter(8, pack, values="int8")
+    ckpt.save(8, {"state": {"x": np.arange(3.0)}})
+    q = ckpt.restore_adapter("p@1", step=8)
+    assert q.alpha == pack.alpha
+    for path in pack.entries:
+        want = dense_of(pack, path)
+        tol = float(np.abs(np.asarray(pack.entries[path][1])).max()) / 127
+        np.testing.assert_allclose(dense_of(q, path), want, atol=tol)
+
+
+def test_checkpoint_gc_covers_adapter_artifacts(tmp_path):
+    import os
+    from repro.checkpoint import CheckpointManager
+    ckpt = CheckpointManager(str(tmp_path / "ck"), keep=2)
+    # an orphan: save_adapter ran, the committing save was preempted
+    ckpt.save_adapter(0, synth_pack(name="orphan@1", seed=9))
+    for s in (1, 2, 3, 4):
+        ckpt.save_adapter(s, synth_pack(name=f"p@{s}", seed=s))
+        ckpt.save(s, {"state": {"x": np.arange(3.0)}})
+    assert ckpt.steps() == [3, 4]
+    assert ckpt.adapters(3) == ["p@3"] and ckpt.adapters(4) == ["p@4"]
+    # pruned: committed steps past keep AND the stale uncommitted orphan
+    dirs = sorted(d for d in os.listdir(ckpt.root) if d.startswith("step_"))
+    assert dirs == ["step_00000003", "step_00000004"]
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore_adapter("p@1", step=1)
+
+
+# ---------------------------------------------------------------------------
+# Hot-swap under load
+# ---------------------------------------------------------------------------
+
+ENGINES = [
+    pytest.param(ServingEngine, dict(cache_size=64), id="lane"),
+    pytest.param(PagedServingEngine, dict(num_pages=32, page_size=8),
+                 id="paged", marks=pytest.mark.slow),
+]
+
+
+def _setup(tmp_path):
+    cfg = get_smoke_config("starcoder2-7b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    p1, p2 = make_packs(cfg, params, 2, seed=7)
+    v1 = AdapterPack("p", p1.entries, p1.alpha)
+    v2 = AdapterPack("p", p2.entries, p2.alpha)
+    rng = np.random.default_rng(0)
+    t1 = rng.integers(1, cfg.vocab_size, (6,))
+    t2 = rng.integers(1, cfg.vocab_size, (5,))
+    return cfg, params, v1, v2, t1, t2
+
+
+def _ref_tokens(Engine, cfg, params, pack, toks, n, tmp, **kw):
+    """Single-version reference: what a request on this pack alone emits."""
+    store = AdapterStore(str(tmp))
+    store.publish(pack)
+    eng = Engine(cfg, params, slots=2, store=store, **kw)
+    f = eng.submit(toks, "p", max_tokens=n)
+    eng.run()
+    eng.shutdown(include_store=True)
+    return list(f.tokens)
+
+
+@pytest.mark.parametrize("Engine,kw", ENGINES)
+def test_hot_swap_under_load(tmp_path, Engine, kw):
+    cfg, params, v1, v2, t1, t2 = _setup(tmp_path)
+    r1 = _ref_tokens(Engine, cfg, params, v1, t1, 12, tmp_path / "r1", **kw)
+    r2 = _ref_tokens(Engine, cfg, params, v2, t2, 8, tmp_path / "r2", **kw)
+
+    store = AdapterStore(str(tmp_path / "live"))
+    assert store.publish(v1) == "p@1"
+    eng = Engine(cfg, params, slots=2, store=store, **kw)
+    f1 = eng.submit(t1, "p", max_tokens=12)
+    assert f1.adapter == "p@1"
+    for _ in range(4):
+        eng.step()
+    assert not f1.done()
+
+    # publish v2 mid-stream: new submissions land on it, f1 stays pinned
+    assert store.publish(v2) == "p@2"
+    f2 = eng.submit(t2, "p", max_tokens=8)
+    assert f2.adapter == "p@2"
+    eng.step()
+    assert "p@1" in eng.engine.packs         # pinned by in-flight f1
+    assert eng._vpins.get("p@1", 0) == 1
+
+    eng.run()
+    assert list(f1.tokens) == r1             # zero divergence through swap
+    assert list(f2.tokens) == r2
+    # drained: the superseded version is retired everywhere
+    assert "p@1" not in eng.engine.packs and "p@2" in eng.engine.packs
+    assert not store.is_resident("p@1")
+    assert eng._vpins == {}
+
+    # explicit old ids still work (reload from the store's file tier)...
+    f3 = eng.submit(t1, "p@1", max_tokens=12)
+    assert f3.adapter == "p@1"
+    # ...and a queued request that is cancelled releases its pin
+    f4 = eng.submit(t2, "p", max_tokens=8)
+    f5 = eng.submit(t2, "p", max_tokens=8)   # 2 slots: f5 queues
+    assert eng.cancel(f5) and f5.cancelled
+    eng.run()
+    assert list(f3.tokens) == r1
+    assert list(f4.tokens) == r2
+    assert eng._vpins == {}
+    assert "p@1" not in eng.engine.packs     # re-evicted after f3 drained
+    eng.shutdown(include_store=True)
+
+
+def test_multitenant_unregister_and_resolve(tmp_path):
+    from repro.serving import MultiTenantEngine
+    cfg = get_smoke_config("starcoder2-7b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    packs = make_packs(cfg, params, 2, seed=7)
+    store = AdapterStore(str(tmp_path / "s"))
+    vid = store.publish(AdapterPack("p", packs[0].entries, packs[0].alpha))
+    eng = MultiTenantEngine(cfg, params, store=store)
+    assert eng.resolve("p") == vid == "p@1"
+    assert eng.resolve(("p", "q")) == ("p@1", "q")
+    assert eng.resolve(None) is None
+    for pk in packs:
+        eng.register(pk)
+    rng = np.random.default_rng(1)
+    toks = rng.integers(1, cfg.vocab_size, (2, 5))
+    out0, _ = eng.generate({"tokens": np.asarray(toks)}, ["a0", "a1"], 4)
+    assert eng.unregister("a0")
+    assert not eng.unregister("a0")          # already gone
+    assert "a0" not in eng.packs
+    with pytest.raises(KeyError):
+        eng.ids_for(["a0"])
+    # the survivor still serves, token-identical to its pre-removal output
+    # (row 1: same prompt, same adapter, before vs after the removal)
+    out1, _ = eng.generate({"tokens": np.asarray(toks)}, ["a1", "a1"], 4)
+    np.testing.assert_array_equal(np.asarray(out1[1]), np.asarray(out0[1]))
+    eng.shutdown()
