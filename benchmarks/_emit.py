@@ -58,7 +58,7 @@ GATED_METRICS = {
     "rapid_switching": ("switches_per_s",),
     "slo_load": ("tokens_per_s", "goodput_tok_s", "completed",
                  "prefetch_hit_rate", "cold_ttft_p99_gain",
-                 "overlap_realized_frac"),
+                 "overlap_realized_frac", "goodput_under_faults"),
     "train_efficiency": ("adapters_per_gb_f32", "adapters_per_gb_int8",
                          "moment_bytes_ratio", "concurrency_speedup"),
 }
@@ -69,7 +69,7 @@ GATED_MAX_METRICS = {
     "continuous_batching": ("p99_ttft_ms_continuous", "p99_ttft_ms_paged"),
     "slo_load": ("p50_latency_ms", "p99_latency_ms", "p99_ttft_ms",
                  "slo_violation_rate", "p99_ttft_cold_ms",
-                 "prefetch_stall_ms"),
+                 "prefetch_stall_ms", "shed_rate", "degraded_rate"),
     "train_efficiency": ("swap_latency_ms", "multi_step_ms_f32",
                          "multi_step_ms_int8"),
 }

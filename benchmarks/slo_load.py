@@ -36,6 +36,12 @@ lanes:
     requests that met ``--slo-ms``; under overload these diverge, which
     is the number that matters
   * ``slo_violation_rate`` — fraction of completed requests over SLO
+  * with ``--chaos``: ``goodput_under_faults`` (chaos-pass goodput as a
+    fraction of the fault-free async run; gated floor) plus
+    ``shed_rate`` / ``degraded_rate`` ceilings — the chaos pass replays
+    the same trace under the seeded fault injector
+    (``repro.runtime.faults``) and hard-asserts the chaos contract
+    (every future terminal, every failure typed, goodput >= 70%)
 
 ``--trace PATH`` installs the serving tracer (``repro.analysis.trace``)
 for the measured (async) run, writes the JSONL + Chrome exports, prints
@@ -66,12 +72,15 @@ from repro.models import layers, lm
 from repro.serving import loadgen
 
 
-def build_serving(cfg, params, packs, args, async_mode: bool):
+def build_serving(cfg, params, packs, args, async_mode: bool,
+                  chaos: bool = False):
     """A fresh store + paged engine for one pass over the trace.
 
     Every pack is written to its own store; only the ``--hot`` Zipf-head
     adapters stay resident/registered — the tail is explicitly evicted
-    back to the disk tier so its first touch is a true cold admission."""
+    back to the disk tier so its first touch is a true cold admission.
+    The chaos pass additionally arms the NaN guard (so an injected
+    poisoned slot is quarantined, not emitted as garbage)."""
     store = AdapterStore(tempfile.mkdtemp(prefix="cc-slo-store-"))
     for p in packs:
         store.add(p, values="f32")
@@ -81,7 +90,8 @@ def build_serving(cfg, params, packs, args, async_mode: bool):
         cfg, params, slots=args.slots, num_pages=args.num_pages,
         page_size=args.page_size, max_len=args.max_len,
         chunk_size=args.chunk_size, store=store,
-        async_prefetch=async_mode, slot_pad=args.slot_pad)
+        async_prefetch=async_mode, slot_pad=args.slot_pad,
+        nan_guard=chaos)
     for p in packs[:args.hot]:
         engine.register(p.name)
     return store, engine
@@ -115,6 +125,12 @@ def main() -> None:
     ap.add_argument("--slo-ms", type=float, default=1500.0,
                     help="per-request end-to-end latency SLO")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chaos", action="store_true",
+                    help="run a third pass over the SAME trace with the "
+                    "fault injector installed (seeded 10%% disk failures, "
+                    "injected I/O latency, payload corruption, worker "
+                    "deaths, one poisoned slot) and gate goodput-under-"
+                    "faults against the fault-free async run")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write the serving trace of the async run "
                     "(JSONL; a .chrome.json twin is written next to it) "
@@ -185,6 +201,30 @@ def main() -> None:
             engine.shutdown(include_store=True)
             engines[mode] = (store, engine)
 
+        # chaos pass: the same trace through an engine under injected
+        # faults — the robustness twin of the async (measured) run
+        chaos_rep, chaos_inj, chaos_engine = None, None, None
+        if args.chaos:
+            from repro.runtime import faults
+            store_c, chaos_engine = build_serving(cfg, params, packs, args,
+                                                  async_mode=True,
+                                                  chaos=True)
+            for p in packs[:args.hot]:
+                chaos_engine.submit(reqs[0].prompt[:4 + 1], p.name,
+                                    max_tokens=1)
+            chaos_engine.run()          # compile outside the fault window
+            chaos_inj = faults.install(faults.FaultPlan(
+                seed=args.seed, disk_fail_p=0.10, io_latency_s=0.002,
+                corrupt_p=0.05, worker_death_p=0.05,
+                poison_step=chaos_engine.step_count + 8, poison_slot=0))
+            try:
+                chaos_rep = loadgen.run(
+                    chaos_engine, reqs, slo_ms=args.slo_ms,
+                    deadline_s=4.0 * args.slo_ms / 1e3)
+            finally:
+                faults.uninstall()
+            chaos_engine.shutdown(include_store=True)
+
     rep = reports["async"]          # the measured run: all primary lanes
     rep_sync = reports["sync"]
     store, engine = engines["async"]
@@ -243,6 +283,31 @@ def main() -> None:
     assert rep_sync.completed == rep_sync.offered, \
         f"sync pass dropped requests: {rep_sync.completed}/{rep_sync.offered}"
 
+    goodput_under_faults = None
+    if chaos_rep is not None:
+        goodput_under_faults = (chaos_rep.goodput_tok_s
+                                / max(rep.goodput_tok_s, 1e-9))
+        health = chaos_engine.health()
+        print(f"chaos: completed {chaos_rep.completed}/{chaos_rep.offered} "
+              f"(failed {chaos_rep.failed}, shed {chaos_rep.shed}, "
+              f"degraded {chaos_rep.degraded}); goodput "
+              f"{chaos_rep.goodput_tok_s:.1f} tok/s = "
+              f"{goodput_under_faults:.1%} of fault-free; injected "
+              f"{chaos_inj.counts}; errors {chaos_rep.errors_by_type}; "
+              f"quarantined {health['quarantined']}")
+        # the chaos contract (zero unhandled exceptions is implied by
+        # reaching this line: loadgen.run drives step() bare)
+        assert chaos_rep.completed + chaos_rep.failed == chaos_rep.offered, \
+            (f"untracked requests under faults: {chaos_rep.completed} + "
+             f"{chaos_rep.failed} != {chaos_rep.offered}")
+        typed = {"StoreError", "AdapterUnavailable", "RequestShed",
+                 "SlotPoisoned", "TableBuildError"}
+        untyped = set(chaos_rep.errors_by_type) - typed
+        assert not untyped, f"untyped failures under faults: {untyped}"
+        assert goodput_under_faults >= 0.70, \
+            (f"goodput under faults {goodput_under_faults:.1%} < 70% of "
+             f"the fault-free run")
+
     stall_ms = 0.0
     realized = None
     if tracer is not None:
@@ -290,6 +355,14 @@ def main() -> None:
         }
         if realized is not None:
             metrics["overlap_realized_frac"] = realized
+        if chaos_rep is not None:
+            metrics["goodput_under_faults"] = goodput_under_faults
+            metrics["shed_rate"] = chaos_rep.shed_rate
+            metrics["degraded_rate"] = chaos_rep.degraded_rate
+            metrics["chaos_completed"] = chaos_rep.completed
+            metrics["chaos_failed"] = chaos_rep.failed
+            metrics["chaos_shed"] = chaos_rep.shed
+            metrics["chaos_degraded"] = chaos_rep.degraded
         res = _emit.result(
             "slo_load", cfg.name,
             metrics=metrics,
@@ -300,7 +373,11 @@ def main() -> None:
                   "overload": args.overload, "burst": args.burst,
                   "zipf": args.zipf, "duration": args.duration,
                   "num_pages": args.num_pages, "page_size": args.page_size,
-                  "trace": args.trace})
+                  "trace": args.trace,
+                  "chaos_injected": (dict(chaos_inj.counts)
+                                     if chaos_inj is not None else None),
+                  "chaos_errors": (dict(chaos_rep.errors_by_type)
+                                   if chaos_rep is not None else None)})
         print(f"wrote {_emit.emit(res, args.json or None)}")
 
 

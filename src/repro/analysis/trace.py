@@ -46,6 +46,17 @@ The buffer is a bounded ring: when ``capacity`` events have been
 recorded the oldest are dropped (``tracer.dropped`` counts them), so a
 long-lived serving loop can stay instrumented without unbounded host
 memory.
+
+Fault / degradation events (``runtime/faults.py``; full failure model in
+``src/repro/runtime/README.md``): the injector marks every injected
+event as a ``fault.*`` instant (cat ``fault``: ``fault.disk_fail``,
+``fault.corrupt``, ``fault.io_latency``, ``fault.worker_death``,
+``fault.build_fail``, ``fault.poison``, ``fault.preempt``), and the
+degradation ladder emits its decisions as instants too — ``store.retry``
+/ ``store.quarantine`` (cat ``store``), ``shed.deadline`` /
+``shed.queue_full`` / ``degrade`` / ``slot.poison`` (cat ``serving``),
+``fault.build_backoff`` (cat ``tables``) — so a chaos-bench trace shows
+both what was injected and how serving absorbed it.
 """
 from __future__ import annotations
 

@@ -74,6 +74,17 @@ def versioned_id(base: str, version: int) -> str:
     return f"{base}@{int(version)}"
 
 
+def prior_version(name: str) -> Optional[str]:
+    """The previous published version of a versioned id — the fallback
+    ladder's next candidate when ``name@v`` fails to load
+    (``"persona@3" -> "persona@2"``). ``None`` for ``@1`` and for
+    unversioned names: the ladder falls through to the base model."""
+    base, v = split_version(name)
+    if v is None or v <= 1:
+        return None
+    return versioned_id(base, v - 1)
+
+
 @dataclass
 class SwitchStats:
     name: str

@@ -39,3 +39,8 @@ from repro.hub.packio import (PackFormatError, QuantPack,  # noqa: F401
 from repro.hub.serving import (PagedServingEngine, ServeFuture,  # noqa: F401
                                ServingEngine)
 from repro.hub.store import AdapterStore, PrefetchHandle  # noqa: F401
+# the serving failure taxonomy (see src/repro/runtime/README.md) — what
+# ServeFuture.result() raises and the store's degradation ladder emits
+from repro.runtime.faults import (AdapterUnavailable, RequestShed,  # noqa: F401
+                                  ServingError, SlotPoisoned, StoreError,
+                                  TableBuildError)

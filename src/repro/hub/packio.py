@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.adapters import AdapterPack
+from repro.runtime import faults
 
 MAGIC = b"SHPKv2\n\0"
 VERSION = 2
@@ -283,6 +284,9 @@ def load_pack(path: str, dequantize: bool = True
     with open(path, "rb") as f:
         header = _read_header(f)
         payload = f.read()
+    # fault injection flips a payload byte here so the REAL crc32 check
+    # below is what rejects it — corruption takes the production path
+    payload = faults.corrupt_payload(path, payload)
     if len(payload) != header["payload_len"]:
         raise PackFormatError(
             f"payload truncated: {len(payload)} bytes, header says "

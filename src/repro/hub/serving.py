@@ -63,6 +63,7 @@ synchronous code path.
 from __future__ import annotations
 
 import functools
+import threading
 import time
 from collections import deque
 from typing import Any, Dict, List, Optional
@@ -73,13 +74,27 @@ import numpy as np
 
 from repro.analysis import trace
 from repro.core.switching import (FusedLRU, Tenant, normalize_tenant,
-                                  split_version, tenant_members)
+                                  prior_version, split_version,
+                                  tenant_members)
 from repro.models import lm
+from repro.runtime import faults
+from repro.runtime.faults import (AdapterUnavailable, EngineWatchdog,
+                                  RequestShed, ServingError, SlotPoisoned,
+                                  StoreError, TableBuildError)
 from repro.serving.multitenant import MultiTenantEngine
+
+_NO_FALLBACK = object()     # degradation ladder exhausted (sentinel)
 
 
 class ServeFuture:
-    """Resolves when the request's final token is generated."""
+    """Resolves when the request's final token is generated — or fails
+    with the request's *typed* terminal error (``runtime/faults.py``
+    taxonomy: ``RequestShed`` when admission shed it, ``SlotPoisoned``
+    when its decode slot was quarantined, ``StoreError`` /
+    ``AdapterUnavailable`` when its adapter could not be served and the
+    fallback ladder was exhausted). ``degraded`` marks a request the
+    ladder downgraded (previous version or base model);
+    ``degraded_from`` records what it originally resolved to."""
 
     def __init__(self, rid: int, adapter: Tenant, max_tokens: int):
         self.rid = rid
@@ -90,16 +105,30 @@ class ServeFuture:
         self.finished_step: Optional[int] = None
         self.submit_time: Optional[float] = None
         self.finish_time: Optional[float] = None
+        self.deadline_s: Optional[float] = None  # queue-time budget (shed)
         self.ttft: Optional[float] = None     # seconds to first token
         self.first_token_step: Optional[int] = None
         self.cold = False     # adapter needed a disk load at submit time
         self.cancelled = False
+        self.error: Optional[Exception] = None   # typed terminal failure
+        self.degraded = False                    # served below what was asked
+        self.degraded_from: Optional[Tenant] = None
         self._done = False
+        self._event = threading.Event()
 
     def done(self) -> bool:
         return self._done
 
-    def result(self) -> np.ndarray:
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        """The generated tokens. A shed/cancelled/poisoned/failed request
+        raises its typed terminal error instead of pretending to be in
+        flight. ``timeout=`` waits (bounded) for a terminal state —
+        useful when another thread drives the engine; the default stays
+        non-blocking, exactly the old contract."""
+        if timeout is not None and not self._done:
+            self._event.wait(timeout)
+        if self.error is not None:
+            raise self.error
         if self.cancelled:
             raise RuntimeError(f"request {self.rid} was cancelled")
         if not self._done:
@@ -162,6 +191,189 @@ class _EngineCommon:
 
     def register(self, pack) -> None:
         self.engine.register(pack)
+
+    # -- fault tolerance ------------------------------------------------
+    #
+    # The degradation ladder (full writeup: src/repro/runtime/README.md).
+    # Store-level failures (StoreError after retries, AdapterUnavailable
+    # for a quarantined pack) are handled *per request*: the fallback
+    # policy walks the request down to the last-good published version
+    # (``fallback="previous"``: name@v -> name@v-1 -> ... -> base) or
+    # straight to the base model (``"base"``; adapter stacks always fall
+    # straight to base — a partially-applied stack is a different model,
+    # not a degraded one). A downgraded request is flagged
+    # ``fut.degraded`` and keeps decoding; only a request the ladder
+    # cannot place fails, with its typed error on the future. Admission
+    # failures (bounded queue, queue deadline) shed with ``RequestShed``
+    # — never a silent drop. ``nan_guard`` (off by default: the guard
+    # reads logits back, which the pre-PR hot path never did) quarantines
+    # a slot whose logits go non-finite while the rest of the batch keeps
+    # decoding.
+
+    def _init_faults(self, max_queue: Optional[int], fallback: str,
+                     nan_guard: bool) -> None:
+        if fallback not in ("previous", "base", "none"):
+            raise ValueError(f"unknown fallback policy {fallback!r} "
+                             "(previous | base | none)")
+        self.max_queue = max_queue
+        self.fallback = fallback
+        self.nan_guard = nan_guard
+        self.watchdog = EngineWatchdog()
+        self.shed = 0          # requests rejected/expired by admission
+        self.degraded = 0      # requests served below what they asked for
+        self.poisoned = 0      # slots quarantined on non-finite logits
+        self.failed = 0        # requests terminated with a typed error
+
+    def _fail_fut(self, fut: ServeFuture, err: Exception,
+                  count_failed: bool = True) -> None:
+        """Terminal failure: typed error onto the future, versions
+        unpinned, waiters released."""
+        fut.error = err
+        fut._done = True
+        fut._event.set()
+        if count_failed:
+            self.failed += 1
+        self._unpin_versions(fut)
+
+    def _fallback_candidate(self, cand: Tenant):
+        """The next rung down the ladder from ``cand``, or the
+        ``_NO_FALLBACK`` sentinel when there is nowhere left to go.
+        ``None`` (the base model) is a real candidate — it always
+        serves."""
+        if self.fallback == "none" or cand is None:
+            return _NO_FALLBACK
+        members = tenant_members(normalize_tenant(cand))
+        if len(members) == 1 and self.fallback == "previous":
+            prev = prior_version(self.engine.resolve(members[0]))
+            store = self.engine.store
+            while prev is not None:
+                if prev in self.engine.packs or \
+                        (store is not None and prev in store
+                         and prev not in getattr(store, "quarantined",
+                                                 list)()):
+                    return prev
+                prev = prior_version(prev)
+        return None            # base model: the ladder's floor
+
+    def _degrade_submit(self, fut: ServeFuture, orig: Tenant,
+                        err: ServingError):
+        """Walk the ladder at submit time (the sync path's inline load
+        failed). Returns the prepared (adapter, handles, cold) of the
+        rung that worked, or None after failing the future typed."""
+        cand = self._fallback_candidate(orig)
+        while cand is not _NO_FALLBACK:
+            try:
+                adapter, handles, cold = self._prepare_adapter(cand)
+            except (StoreError, AdapterUnavailable):
+                cand = self._fallback_candidate(cand)
+                continue
+            fut.degraded = True
+            fut.degraded_from = normalize_tenant(orig)
+            self.degraded += 1
+            trace.instant("degrade", cat="serving", rid=fut.rid,
+                          to=repr(adapter), err=type(err).__name__)
+            return adapter, handles, cold
+        self._fail_fut(fut, err)
+        return None
+
+    def _degrade_queued(self, p, err: ServingError) -> bool:
+        """Walk the ladder for a queued request whose async prefetch
+        failed: release the dead handles, re-pin and re-prefetch the
+        fallback. False when the ladder is exhausted (the request left
+        the queue with its typed error)."""
+        for h in p.handles:
+            h.release()
+        p.handles = []
+        self._unpin_versions(p.fut)
+        orig = p.fut.adapter
+        cand = self._fallback_candidate(orig)
+        while cand is not _NO_FALLBACK:
+            try:
+                adapter, handles, _ = self._prepare_adapter(cand)
+            except (StoreError, AdapterUnavailable):
+                cand = self._fallback_candidate(cand)
+                continue
+            p.fut.adapter = adapter
+            p.handles = handles
+            if p.fut.degraded_from is None:
+                p.fut.degraded_from = orig
+            p.fut.degraded = True
+            self._pin_versions(p.fut)
+            self.degraded += 1
+            trace.instant("degrade", cat="serving", rid=p.fut.rid,
+                          to=repr(adapter), err=type(err).__name__)
+            return True
+        try:
+            self._queue.remove(p)
+        except ValueError:
+            pass
+        self._fail_fut(p.fut, err)
+        return False
+
+    def _expired(self, fut: ServeFuture,
+                 now: Optional[float] = None) -> bool:
+        return (fut.deadline_s is not None
+                and fut.submit_time is not None
+                and ((now or time.perf_counter())
+                     - fut.submit_time) > fut.deadline_s)
+
+    def _shed_queued(self, p, reason: str) -> None:
+        """Remove a queued request with a typed ``RequestShed`` (cancels
+        its prefetches; versions unpinned via the failure path)."""
+        try:
+            self._queue.remove(p)
+        except ValueError:
+            pass
+        for h in p.handles:
+            h.cancel()
+        p.handles = []
+        self.shed += 1
+        trace.instant(f"shed.{reason}", cat="serving", rid=p.fut.rid)
+        self._fail_fut(p.fut, RequestShed(
+            f"request {p.fut.rid} shed ({reason})", rid=p.fut.rid,
+            reason=reason), count_failed=False)
+
+    def _shed_expired(self) -> None:
+        """Expire queued requests past their deadline — every step, so a
+        deadlined request is never silently parked in the queue."""
+        now = time.perf_counter()
+        for p in [p for p in self._queue if self._expired(p.fut, now)]:
+            self._shed_queued(p, "deadline")
+
+    def health(self) -> Dict[str, Any]:
+        """Liveness + degradation snapshot: the watchdog's stall view,
+        queue/lane occupancy, fault counters, store quarantine list."""
+        store = self.engine.store
+        return {
+            "watchdog": self.watchdog.snapshot(),
+            "queued": len(self._queue),
+            "active": sum(a is not None for a in self._active),
+            "step_count": self.step_count,
+            "tokens_out": self.tokens_out,
+            "shed": self.shed,
+            "degraded": self.degraded,
+            "poisoned": self.poisoned,
+            "failed": self.failed,
+            "quarantined": (list(store.quarantined())
+                            if store is not None
+                            and hasattr(store, "quarantined") else []),
+        }
+
+    def _next_tokens(self, logits, live: List[int]):
+        """Greedy argmax + the poison/NaN-guard path. With no injector
+        and ``nan_guard`` off this is byte-for-byte the pre-PR argmax —
+        logits never come back to the host."""
+        pslot = faults.poison_logits(self.step_count)
+        if pslot is None and not self.nan_guard:
+            return np.asarray(jnp.argmax(logits, -1), np.int32), ()
+        lg = np.array(logits, np.float32)   # writable host copy
+        if pslot is not None and live:
+            lg[live[pslot % len(live)]] = np.nan
+        bad = tuple(s for s in live
+                    if not np.isfinite(lg[s]).all()) if self.nan_guard else ()
+        nxt = np.nan_to_num(lg, nan=0.0, posinf=0.0,
+                            neginf=0.0).argmax(-1).astype(np.int32)
+        return nxt, bad
 
     # -- versioned hot-swap --------------------------------------------
     #
@@ -266,11 +478,16 @@ class _EngineCommon:
         deferred fused transition. Never blocks."""
         if not self.async_prefetch:
             return
-        for p in self._queue:
+        for p in list(self._queue):
             if p.handles and all(h.done() for h in p.handles):
-                for h in p.handles:
-                    self.engine.register(h.result())
-                p.handles = []
+                try:
+                    for h in p.handles:
+                        self.engine.register(h.result())
+                    p.handles = []
+                except ServingError as e:
+                    # failed load: walk the request down the fallback
+                    # ladder (or fail it typed) — never crash the loop
+                    self._degrade_queued(p, e)
         self.engine.kick_async_build()
 
     def _stall_for_head(self) -> None:
@@ -279,16 +496,28 @@ class _EngineCommon:
         async serving could NOT hide."""
         p = self._queue[0]
         with trace.span("prefetch.stall", cat="store", rid=p.fut.rid):
-            for h in p.handles:
-                self.engine.register(h.result())
-            p.handles = []
+            while p.handles:
+                try:
+                    for h in p.handles:
+                        self.engine.register(h.result())
+                    p.handles = []
+                except ServingError as e:
+                    if not self._degrade_queued(p, e):
+                        return        # head failed out of the queue, typed
+                    # else: p now carries the fallback's handles; block on
+                    # those too (still the head, still nothing live)
         self.engine.kick_async_build()
 
     def _admittable(self, p, had_live: bool) -> bool:
-        """FIFO admission gate for the async pipeline: a request enters
-        only once its packs are registered, and — while a table rebuild is
-        in flight — only if the current tables already cover its tenant
-        (hot) or there is no live decode the stall could disturb."""
+        """FIFO admission gate: a request past its deadline is shed right
+        here (typed, never silently dropped); with the async pipeline a
+        request enters only once its packs are registered, and — while a
+        table rebuild is in flight — only if the current tables already
+        cover its tenant (hot) or there is no live decode the stall could
+        disturb."""
+        if self._expired(p.fut):
+            self._shed_queued(p, "deadline")
+            return False
         if not self.async_prefetch:
             return True
         if p.handles:
@@ -310,9 +539,10 @@ class _EngineCommon:
                     h.cancel()
                 p.handles = []
                 fut.cancelled = True
-                fut._done = True
-                self._unpin_versions(fut)
                 trace.instant("prefetch.cancel", cat="store", rid=fut.rid)
+                self._fail_fut(fut, RequestShed(
+                    f"request {fut.rid} was cancelled", rid=fut.rid,
+                    reason="cancelled"), count_failed=False)
                 return True
         return False
 
@@ -367,7 +597,9 @@ class ServingEngine(_EngineCommon):
                  scheduler: Optional[FusedLRU] = None, store=None,
                  table_dtype: str = "f32",
                  interpret: Optional[bool] = None,
-                 async_prefetch: bool = False, slot_pad: int = 1):
+                 async_prefetch: bool = False, slot_pad: int = 1,
+                 max_queue: Optional[int] = None,
+                 fallback: str = "previous", nan_guard: bool = False):
         if cfg.encoder_only:
             raise ValueError("encoder-only archs have no decode serving path")
         self.cfg = cfg
@@ -389,6 +621,7 @@ class ServingEngine(_EngineCommon):
         self.step_count = 0
         self.tokens_out = 0
         self.decode_slot_waste = 0    # idle-lane decode steps (utilization)
+        self._init_faults(max_queue, fallback, nan_guard)
 
     # ------------------------------------------------------------------
     # Request API
@@ -396,9 +629,14 @@ class ServingEngine(_EngineCommon):
 
     def submit(self, prompt_tokens, adapter: Tenant = None,
                max_tokens: int = 16,
-               eos_id: Optional[int] = None) -> ServeFuture:
+               eos_id: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> ServeFuture:
         """Queue one request; returns its future. ``adapter`` is a registered
-        adapter id, a stack of ids, or None for the base model."""
+        adapter id, a stack of ids, or None for the base model.
+        ``deadline_s`` bounds *queue* time: a request still unadmitted
+        that long after submit is shed with ``RequestShed``. A full
+        bounded queue (``max_queue=``) sheds at submit — the returned
+        future carries the typed error instead of a silent drop."""
         if max_tokens < 1:
             raise ValueError("max_tokens must be >= 1")
         prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
@@ -414,11 +652,27 @@ class ServingEngine(_EngineCommon):
         # arrival is stamped BEFORE adapter resolution: the sync path's
         # inline disk load is queue time the request actually waited
         t_sub = time.perf_counter()
-        adapter, handles, cold = self._prepare_adapter(adapter)
-        fut = ServeFuture(self._rid, adapter, max_tokens)
-        fut.cold = cold
-        fut.submit_time = t_sub
+        fut = ServeFuture(self._rid, normalize_tenant(adapter), max_tokens)
         self._rid += 1
+        fut.submit_time = t_sub
+        fut.deadline_s = deadline_s
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self.shed += 1
+            trace.instant("shed.queue_full", cat="serving", rid=fut.rid)
+            self._fail_fut(fut, RequestShed(
+                f"request {fut.rid} shed (queue_full: "
+                f"{len(self._queue)} >= {self.max_queue})", rid=fut.rid,
+                reason="queue_full"), count_failed=False)
+            return fut
+        try:
+            adapter, handles, cold = self._prepare_adapter(adapter)
+        except (StoreError, AdapterUnavailable) as e:
+            prepared = self._degrade_submit(fut, adapter, e)
+            if prepared is None:
+                return fut             # ladder exhausted: typed failure
+            adapter, handles, cold = prepared
+        fut.adapter = adapter
+        fut.cold = cold
         self._pin_versions(fut)
         self._queue.append(_Pending(fut, prompt, eos_id, handles))
         return fut
@@ -439,10 +693,27 @@ class ServingEngine(_EngineCommon):
         p.fut.finished_step = self.step_count
         p.fut.finish_time = time.perf_counter()
         p.fut._done = True
+        p.fut._event.set()
         self._active[slot] = None
         self._pos[slot] = 0
         self._last[slot] = 0
         self._unpin_versions(p.fut)
+
+    def _poison(self, slot: int) -> None:
+        """Quarantine ONE decode slot whose logits went non-finite: its
+        request fails typed, the lane is freed, the rest of the batch
+        never stops decoding."""
+        p = self._active[slot]
+        self.poisoned += 1
+        trace.instant("slot.poison", cat="serving", rid=p.fut.rid,
+                      slot=slot, step=self.step_count)
+        self._active[slot] = None
+        self._pos[slot] = 0
+        self._last[slot] = 0
+        self._fail_fut(p.fut, SlotPoisoned(
+            f"request {p.fut.rid} poisoned: non-finite logits on slot "
+            f"{slot} at step {self.step_count}", rid=p.fut.rid,
+            step=self.step_count))
 
     def _admit(self, slot: int, p: _Pending) -> None:
         with trace.span("admit", rid=p.fut.rid, slot=slot,
@@ -468,6 +739,9 @@ class ServingEngine(_EngineCommon):
         """Admit queued requests into free slots, then run one decode step
         over every occupied lane. Returns False when fully drained."""
         with trace.span("step", engine="lane") as sp:
+            t0 = time.perf_counter()
+            faults.on_engine_step(self.step_count)
+            self._shed_expired()
             self._drain_prefetches()
             had_live = any(a is not None for a in self._active)
             if self.async_prefetch and not had_live and self._queue \
@@ -477,7 +751,15 @@ class ServingEngine(_EngineCommon):
                 if self._active[slot] is None and self._queue:
                     if not self._admittable(self._queue[0], had_live):
                         break          # FIFO: head's prefetch still landing
-                    self._admit(slot, self._queue.popleft())
+                    p = self._queue.popleft()
+                    try:
+                        self._admit(slot, p)
+                    except TableBuildError:
+                        # build failed (simulated OOM): requeue at the
+                        # head and retry on the next step's fresh build
+                        self._queue.appendleft(p)
+                        trace.instant("fault.build_backoff", cat="tables")
+                        break
             live = [s for s in range(self.slots)
                     if self._active[s] is not None]
             if not live:
@@ -493,17 +775,27 @@ class ServingEngine(_EngineCommon):
             # tenant's share
             self.engine.schedule([names[s] for s in live],
                                  defer=self.async_prefetch)
-            with trace.span("decode", live=len(live)):
-                stale = self.async_prefetch
-                ids = self.engine.ids_for(names, stale_ok=stale)
-                wp = self.engine.wrapped_params(ids, stale_ok=stale)
-                toks = jnp.asarray(self._last[:, None])
-                logits, self.caches = self.engine._decode(
-                    wp, toks, self.caches, jnp.asarray(self._pos))
-                nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+            try:
+                with trace.span("decode", live=len(live)):
+                    stale = self.async_prefetch
+                    ids = self.engine.ids_for(names, stale_ok=stale)
+                    wp = self.engine.wrapped_params(ids, stale_ok=stale)
+                    toks = jnp.asarray(self._last[:, None])
+                    logits, self.caches = self.engine._decode(
+                        wp, toks, self.caches, jnp.asarray(self._pos))
+                    nxt, bad = self._next_tokens(logits, live)
+            except TableBuildError:
+                # nothing was emitted and no position advanced: the whole
+                # decode retries next step against a fresh table build
+                trace.instant("fault.build_backoff", cat="tables")
+                return True
             for s in live:
                 self._pos[s] += 1      # this step's KV landed at _pos[s]
-                self._emit(s, int(nxt[s]))
+                if s in bad:
+                    self._poison(s)
+                else:
+                    self._emit(s, int(nxt[s]))
+            self.watchdog.record(time.perf_counter() - t0)
             return True
 
 
@@ -540,7 +832,9 @@ class PagedServingEngine(_EngineCommon):
                  scheduler: Optional[FusedLRU] = None, store=None,
                  table_dtype: str = "f32", quant_kv: bool = False,
                  interpret: Optional[bool] = None,
-                 async_prefetch: bool = False, slot_pad: int = 1):
+                 async_prefetch: bool = False, slot_pad: int = 1,
+                 max_queue: Optional[int] = None,
+                 fallback: str = "previous", nan_guard: bool = False):
         if cfg.encoder_only:
             raise ValueError("encoder-only archs have no decode serving path")
         from repro.serving.kvcache import PagePool, copy_page, pages_for
@@ -570,6 +864,7 @@ class PagedServingEngine(_EngineCommon):
         self.tokens_out = 0
         self.decode_slot_waste = 0
         self.prefill_chunks = 0
+        self._init_faults(max_queue, fallback, nan_guard)
         self.peak_resident = 0        # max concurrently admitted requests
         self.peak_used_pages = 0      # incl. evictable registry-only pages
         self.peak_ws_pages = 0        # pages pinned by admitted requests
@@ -599,7 +894,8 @@ class PagedServingEngine(_EngineCommon):
 
     def submit(self, prompt_tokens, adapter: Tenant = None,
                max_tokens: int = 16,
-               eos_id: Optional[int] = None) -> ServeFuture:
+               eos_id: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> ServeFuture:
         from repro.serving.kvcache import pages_for
         if max_tokens < 1:
             raise ValueError("max_tokens must be >= 1")
@@ -618,11 +914,27 @@ class PagedServingEngine(_EngineCommon):
                              f"{self.num_pages - 1}")
         # arrival stamp precedes adapter resolution (see ServingEngine.submit)
         t_sub = time.perf_counter()
-        adapter, handles, cold = self._prepare_adapter(adapter)
-        fut = ServeFuture(self._rid, adapter, max_tokens)
-        fut.cold = cold
-        fut.submit_time = t_sub
+        fut = ServeFuture(self._rid, normalize_tenant(adapter), max_tokens)
         self._rid += 1
+        fut.submit_time = t_sub
+        fut.deadline_s = deadline_s
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self.shed += 1
+            trace.instant("shed.queue_full", cat="serving", rid=fut.rid)
+            self._fail_fut(fut, RequestShed(
+                f"request {fut.rid} shed (queue_full: "
+                f"{len(self._queue)} >= {self.max_queue})", rid=fut.rid,
+                reason="queue_full"), count_failed=False)
+            return fut
+        try:
+            adapter, handles, cold = self._prepare_adapter(adapter)
+        except (StoreError, AdapterUnavailable) as e:
+            prepared = self._degrade_submit(fut, adapter, e)
+            if prepared is None:
+                return fut             # ladder exhausted: typed failure
+            adapter, handles, cold = prepared
+        fut.adapter = adapter
+        fut.cold = cold
         self._pin_versions(fut)
         self._queue.append(_PagedRequest(fut, prompt, eos_id, need, nblk,
                                          handles))
@@ -687,6 +999,7 @@ class PagedServingEngine(_EngineCommon):
         r.fut.finished_step = self.step_count
         r.fut.finish_time = time.perf_counter()
         r.fut._done = True
+        r.fut._event.set()
         self.pool.release(r.pages + r.reserve)
         r.pages, r.reserve = [], []
         self._active[slot] = None
@@ -694,6 +1007,24 @@ class PagedServingEngine(_EngineCommon):
         self._pos[slot] = 0
         self._last[slot] = 0
         self._unpin_versions(r.fut)
+
+    def _poison(self, slot: int) -> None:
+        """Quarantine ONE decode slot (non-finite logits): fail the
+        request typed, free its pages, keep the rest of the batch live."""
+        r = self._active[slot]
+        self.poisoned += 1
+        trace.instant("slot.poison", cat="serving", rid=r.fut.rid,
+                      slot=slot, step=self.step_count)
+        self.pool.release(r.pages + r.reserve)
+        r.pages, r.reserve = [], []
+        self._active[slot] = None
+        self._bt[slot, :] = 0
+        self._pos[slot] = 0
+        self._last[slot] = 0
+        self._fail_fut(r.fut, SlotPoisoned(
+            f"request {r.fut.rid} poisoned: non-finite logits on slot "
+            f"{slot} at step {self.step_count}", rid=r.fut.rid,
+            step=self.step_count))
 
     def _prefill_step(self, slot: int) -> None:
         from repro.serving.kvcache import pages_for
@@ -733,6 +1064,9 @@ class PagedServingEngine(_EngineCommon):
         """FIFO-admit while pages last, run ONE prefill chunk, then one
         decode step over every live lane. Returns False when drained."""
         with trace.span("step", engine="paged") as sp:
+            t0 = time.perf_counter()
+            faults.on_engine_step(self.step_count)
+            self._shed_expired()
             self._drain_prefetches()
             had_live = any(a is not None for a in self._active)
             if self.async_prefetch and not had_live and self._queue \
@@ -770,7 +1104,12 @@ class PagedServingEngine(_EngineCommon):
                           cat="pages")
             trace.counter("resident", len(pf) + len(live))
             if pf:
-                self._prefill_step(pf[0])
+                try:
+                    self._prefill_step(pf[0])
+                except TableBuildError:
+                    # chunk not applied (r.done untouched): retried next
+                    # step against a fresh table build
+                    trace.instant("fault.build_backoff", cat="tables")
             if live:
                 self.decode_slot_waste += self.slots - len(live)
                 live_set = set(live)
@@ -779,24 +1118,33 @@ class PagedServingEngine(_EngineCommon):
                          for s in range(self.slots)]
                 self.engine.schedule([names[s] for s in live],
                                      defer=self.async_prefetch)
-                with trace.span("decode", live=len(live)):
-                    stale = self.async_prefetch
-                    ids = self.engine.ids_for(names, stale_ok=stale)
-                    wp = self.engine.wrapped_params(ids, stale_ok=stale)
-                    for s in live:
-                        self._ensure_writable(s, int(self._pos[s]),
-                                              int(self._pos[s]) + 1)
-                    # idle / still-prefilling lanes decode against the
-                    # scratch page
-                    mask = np.zeros((self.slots,), bool)
-                    mask[live] = True
-                    bt = np.where(mask[:, None], self._bt, 0)
-                    pos = np.where(mask, self._pos, 0)
-                    logits, self.caches = self._decode(
-                        wp, jnp.asarray(self._last[:, None]), self.caches,
-                        jnp.asarray(pos), jnp.asarray(bt))
-                    nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+                try:
+                    with trace.span("decode", live=len(live)):
+                        stale = self.async_prefetch
+                        ids = self.engine.ids_for(names, stale_ok=stale)
+                        wp = self.engine.wrapped_params(ids, stale_ok=stale)
+                        for s in live:
+                            self._ensure_writable(s, int(self._pos[s]),
+                                                  int(self._pos[s]) + 1)
+                        # idle / still-prefilling lanes decode against the
+                        # scratch page
+                        mask = np.zeros((self.slots,), bool)
+                        mask[live] = True
+                        bt = np.where(mask[:, None], self._bt, 0)
+                        pos = np.where(mask, self._pos, 0)
+                        logits, self.caches = self._decode(
+                            wp, jnp.asarray(self._last[:, None]), self.caches,
+                            jnp.asarray(pos), jnp.asarray(bt))
+                        nxt, bad = self._next_tokens(logits, live)
+                except TableBuildError:
+                    # no emit, no position advance: whole decode retries
+                    trace.instant("fault.build_backoff", cat="tables")
+                    return True
                 for s in live:
                     self._pos[s] += 1  # this step's KV landed at _pos[s]
-                    self._emit(s, int(nxt[s]))
+                    if s in bad:
+                        self._poison(s)
+                    else:
+                        self._emit(s, int(nxt[s]))
+            self.watchdog.record(time.perf_counter() - t0)
             return True

@@ -50,20 +50,36 @@ do — loading is a scatter-add into the engine's own weights).
 Thread-safety: all tier bookkeeping is guarded by one reentrant lock;
 disk reads and dequants happen outside it. ``get``/``get_raw`` join an
 in-flight load of the same name instead of issuing a second read.
+
+Failure model (``runtime/faults.py``, full ladder in
+``src/repro/runtime/README.md``): disk loads are retried with capped
+exponential backoff (``load_retries`` x ``retry_backoff_s``); a pack
+that exhausts its retries is **quarantined** — later ``get`` /
+``get_raw`` / ``prefetch`` of that name fail fast with
+``AdapterUnavailable`` until ``clear_quarantine`` — and the failed load
+surfaces as a typed ``StoreError``. ``PrefetchHandle.result()`` never
+leaks a raw worker exception (it wraps them in ``StoreError``) and
+never strands the eviction pin: the pin is released on every terminal
+path (success, worker failure, cancel) and kept only on ``result``
+timeout, where the handle stays live.
 """
 from __future__ import annotations
 
 import os
 import threading
+import time
 from collections import OrderedDict
 from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutTimeoutError
 from typing import Dict, List, Optional, Union  # noqa: F401 (Union: annot.)
 
 from repro.analysis import trace
 from repro.core.adapters import AdapterPack
 from repro.core.switching import split_version, versioned_id
-from repro.hub.packio import (QuantPack, load_pack, peek_pack,
-                              quantize_pack, save_pack)
+from repro.hub.packio import (PackFormatError, QuantPack, load_pack,
+                              peek_pack, quantize_pack, save_pack)
+from repro.runtime import faults
+from repro.runtime.faults import AdapterUnavailable, ServingError, StoreError
 
 
 class PrefetchHandle:
@@ -96,13 +112,28 @@ class PrefetchHandle:
     def result(self, timeout: Optional[float] = None) \
             -> Union[AdapterPack, QuantPack]:
         """The loaded pack (raw form, or dequantized when the handle was
-        created with ``dequantize=True``). Releases the eviction pin."""
+        created with ``dequantize=True``). Releases the eviction pin on
+        every terminal outcome — success or failure — so a failed
+        prefetch can never block eviction; a load failure surfaces as a
+        typed ``StoreError`` (or the worker's own ``ServingError``),
+        never the raw worker exception. The one non-terminal outcome is
+        a ``timeout=`` expiry: the ``TimeoutError`` is re-raised with
+        the pin still held and the handle stays usable."""
+        if self._fut is not None:
+            try:
+                self._fut.result(timeout=timeout)
+            except CancelledError:
+                pass          # another handle's abort raced us; reload below
+            except FutTimeoutError:
+                raise         # still loading — keep the pin, handle lives on
+            except ServingError:
+                self.release()
+                raise         # already typed (StoreError/AdapterUnavailable)
+            except Exception as e:
+                self.release()
+                raise StoreError(f"prefetch of adapter {self.name!r} "
+                                 f"failed: {e}", name=self.name) from e
         try:
-            if self._fut is not None:
-                try:
-                    self._fut.result(timeout=timeout)
-                except CancelledError:
-                    pass      # another handle's abort raced us; reload below
             # re-read through the tiers so LRU recency is recorded and a
             # staged dequant is reused; the pin guarantees residency
             if self.dequantize:
@@ -131,13 +162,17 @@ class AdapterStore:
     def __init__(self, root: Optional[str] = None,
                  budget_bytes: Optional[int] = None,
                  staging_bytes: Optional[int] = None,
-                 workers: int = 2):
+                 workers: int = 2,
+                 load_retries: int = 2,
+                 retry_backoff_s: float = 0.01):
         self.root = root
         if root is not None:
             os.makedirs(root, exist_ok=True)
         self.budget_bytes = budget_bytes
         self.staging_bytes = staging_bytes
         self.workers = max(int(workers), 1)
+        self.load_retries = max(int(load_retries), 0)
+        self.retry_backoff_s = retry_backoff_s
         self._paths: Dict[str, Optional[str]] = {}    # id -> file (None = mem)
         self._latest: Dict[str, int] = {}             # base name -> newest v
         self._pinned: set = set()
@@ -152,11 +187,15 @@ class AdapterStore:
         self._futs: Dict[str, Future] = {}            # dedup in-flight loads
         self._fut_est: Dict[str, int] = {}            # submit-time byte est.
         self._inflight_bytes = 0
+        self._quarantined: Dict[str, str] = {}        # id -> failure reason
+        self._shutdown = False
         self.loads = 0                                # disk loads (cache miss)
         self.evictions = 0
         self.staging_hits = 0
         self.prefetch_hits = 0                        # submit found resident
         self.prefetch_misses = 0                      # submit went to disk
+        self.retries = 0                              # load attempts retried
+        self.load_failures = 0                        # loads that quarantined
 
     # ------------------------------------------------------------------
     # Registration
@@ -315,6 +354,7 @@ class AdapterStore:
         if name not in self._paths:
             raise KeyError(f"unknown adapter {name!r}; registered: "
                            f"{self.names()}")
+        self._check_quarantine(name)
         with self._lock:
             form = self._resident.get(name)
             if form is not None:
@@ -357,6 +397,7 @@ class AdapterStore:
         if name not in self._paths:
             raise KeyError(f"unknown adapter {name!r}; registered: "
                            f"{self.names()}")
+        self._check_quarantine(name)
         with self._lock:
             self._pin_inflight(name)
             if name in self._resident:
@@ -368,7 +409,7 @@ class AdapterStore:
             self.prefetch_misses += 1
             trace.instant("prefetch.miss", cat="store", name=name)
             fut = self._futs.get(name)
-            if fut is None:
+            if fut is None and not self._shutdown:
                 path = self._paths[name]
                 assert path is not None, f"in-memory pack {name!r} lost"
                 try:
@@ -386,11 +427,14 @@ class AdapterStore:
                 fut = self._pool.submit(self._prefetch_job, name,
                                         dequantize, est)
                 self._futs[name] = fut
+            # a shut-down store hands back a workerless handle: fut=None
+            # makes result() load synchronously through the same tiers
             return PrefetchHandle(self, name, cold=True,
                                   dequantize=dequantize, fut=fut)
 
     def _prefetch_job(self, name: str, dequantize: bool, est: int):
         try:
+            faults.on_worker(name)
             form = self._load(name, span="prefetch.disk")
             if dequantize and isinstance(form, QuantPack):
                 self._stage(name, form, span="prefetch.decode")
@@ -421,8 +465,33 @@ class AdapterStore:
             return True
 
     def shutdown(self, wait: bool = True) -> None:
-        """Join the prefetch worker pool (tests / clean teardown)."""
-        pool, self._pool = self._pool, None
+        """Retire the prefetch worker pool — deterministic and idempotent.
+
+        ``wait=True`` drains: every submitted load runs to completion
+        before this returns. ``wait=False`` cancels every load that has
+        not started (cleaning up its dedup entry and in-flight byte
+        estimate under the lock, so no bookkeeping is stranded by a job
+        that will never run) and leaves already-running loads to finish
+        on the pool's threads. Either way no new pool is ever created
+        afterwards: later ``prefetch`` calls return workerless handles
+        that load synchronously on ``result()``, and a concurrent
+        ``PrefetchHandle.cancel()`` racing this teardown settles on one
+        of the two deterministic outcomes (job cancelled here with its
+        books balanced, or job runs and the handle's pin is released by
+        the normal terminal path). Eviction pins are owned by handles
+        and engine version-pins, never by the pool, so shutdown itself
+        can never strand a refcount."""
+        with self._lock:
+            self._shutdown = True
+            pool, self._pool = self._pool, None
+            if not wait:
+                for name, fut in list(self._futs.items()):
+                    if fut.cancel():
+                        self._futs.pop(name, None)
+                        est = self._fut_est.pop(name, 0)
+                        self._inflight_bytes -= est
+                        trace.counter("store.inflight_bytes",
+                                      self._inflight_bytes, cat="store")
         if pool is not None:
             pool.shutdown(wait=wait)
 
@@ -465,15 +534,77 @@ class AdapterStore:
                 self._inflight[name] = n
 
     def _load(self, name: str, span: str) -> Union[AdapterPack, QuantPack]:
+        """One disk load through the degradation ladder: retried with
+        capped exponential backoff on I/O / format errors, quarantined
+        (then ``StoreError``) once retries are exhausted."""
+        self._check_quarantine(name)
         path = self._paths[name]
         assert path is not None, f"in-memory pack {name!r} lost"
-        with trace.span(span, cat="store", name=name) as sp:
-            form = load_pack(path, dequantize=False)
-            sp.set(bytes=form.nbytes())
+        last: Optional[Exception] = None
+        for attempt in range(self.load_retries + 1):
+            if attempt:
+                with self._lock:
+                    self.retries += 1
+                trace.instant("store.retry", cat="store", name=name,
+                              attempt=attempt)
+                time.sleep(min(self.retry_backoff_s * (2 ** (attempt - 1)),
+                               0.25))
+            try:
+                with trace.span(span, cat="store", name=name) as sp:
+                    faults.on_disk_read(name)
+                    form = load_pack(path, dequantize=False)
+                    sp.set(bytes=form.nbytes())
+                break
+            except (OSError, PackFormatError) as e:
+                last = e
+        else:
+            with self._lock:
+                self.load_failures += 1
+            self.quarantine(name, reason=str(last))
+            raise StoreError(
+                f"failed to load adapter {name!r} after "
+                f"{self.load_retries + 1} attempts: {last}",
+                name=name) from last
         with self._lock:
             self.loads += 1
             self._admit(name, form)
         return form
+
+    # ------------------------------------------------------------------
+    # Quarantine (degradation ladder: retry -> quarantine -> fail fast)
+    # ------------------------------------------------------------------
+
+    def _check_quarantine(self, name: str) -> None:
+        with self._lock:
+            reason = self._quarantined.get(name)
+        if reason is not None:
+            raise AdapterUnavailable(
+                f"adapter {name!r} is quarantined ({reason}); "
+                f"clear_quarantine() to retry", name=name)
+
+    def quarantine(self, name: str, reason: str = "manual") -> None:
+        """Mark ``name`` unservable: resident/staged forms are dropped and
+        every later load fails fast with ``AdapterUnavailable`` until
+        ``clear_quarantine``. Called automatically when a load exhausts
+        its retries."""
+        name = self.resolve(name)
+        with self._lock:
+            self._quarantined[name] = reason
+            self._resident.pop(name, None)
+            self._staging.pop(name, None)
+        trace.instant("store.quarantine", cat="store", name=name,
+                      reason=reason)
+
+    def clear_quarantine(self, name: str) -> bool:
+        """Re-admit a quarantined pack (e.g. after the file was repaired).
+        Returns True when the name was quarantined."""
+        name = self.resolve(name)
+        with self._lock:
+            return self._quarantined.pop(name, None) is not None
+
+    def quarantined(self) -> List[str]:
+        with self._lock:
+            return sorted(self._quarantined)
 
     def _stage(self, name: str, form: QuantPack,
                span: str = "dequant") -> AdapterPack:

@@ -1,3 +1,7 @@
 from repro.runtime.ft import (SimulatedPreemption, StragglerMonitor,  # noqa: F401
                               StragglerReport)
+from repro.runtime.faults import (AdapterUnavailable, EngineWatchdog,  # noqa: F401
+                                  FaultInjector, FaultPlan, RequestShed,
+                                  ServingError, SlotPoisoned, StoreError,
+                                  TableBuildError)
 from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -143,6 +143,16 @@ class LoadReport:
     goodput_tokens: int = 0
     per_phase_latencies_ms: Dict[int, List[float]] = field(
         default_factory=dict)
+    # fault-tolerance accounting (runtime/faults.py): requests that ended
+    # with a typed error never contribute latency/goodput samples —
+    # ``failed`` counts all of them, ``shed`` the RequestShed subset, and
+    # ``errors_by_type`` names each terminal error class. ``degraded``
+    # requests completed (they count toward latency/goodput) but were
+    # served below what they asked for.
+    failed: int = 0
+    shed: int = 0
+    degraded: int = 0
+    errors_by_type: Dict[str, int] = field(default_factory=dict)
 
     @property
     def tokens_per_s(self) -> float:
@@ -157,18 +167,30 @@ class LoadReport:
         done = max(self.completed, 1)
         return (self.completed - self.slo_met) / done
 
+    @property
+    def shed_rate(self) -> float:
+        return self.shed / max(self.offered, 1)
+
+    @property
+    def degraded_rate(self) -> float:
+        return self.degraded / max(self.offered, 1)
+
 
 def run(engine, requests: Sequence[GenRequest], *,
         slo_ms: Optional[float] = None,
+        deadline_s: Optional[float] = None,
         max_steps: int = 1_000_000) -> LoadReport:
     """Drive ``engine`` through the trace in wall-clock time.
 
     The engine contract is the request API shared by the lane and paged
     engines: ``submit(prompt, adapter, max_tokens) -> future`` (with
     ``submit_time``/``ttft``/``finish_time`` stamps), ``step()``,
-    ``pending()``. Returns the filled ``LoadReport``."""
+    ``pending()``. ``deadline_s`` forwards a per-request queue deadline
+    to engines that support shedding. Returns the filled
+    ``LoadReport``."""
     reqs = sorted(requests, key=lambda r: r.t)
     futs: List[Tuple[GenRequest, Any]] = []
+    kw = {} if deadline_s is None else {"deadline_s": deadline_s}
     t0 = time.perf_counter()
     i, steps = 0, 0
     while i < len(reqs) or engine.pending():
@@ -181,7 +203,7 @@ def run(engine, requests: Sequence[GenRequest], *,
         while i < len(reqs) and reqs[i].t <= now:
             r = reqs[i]
             futs.append((r, engine.submit(r.prompt, r.adapter,
-                                          max_tokens=r.max_tokens)))
+                                          max_tokens=r.max_tokens, **kw)))
             i += 1
         if engine.pending():
             engine.step()
@@ -196,8 +218,19 @@ def run(engine, requests: Sequence[GenRequest], *,
     for r, f in futs:
         if not f.done():
             continue
+        err = getattr(f, "error", None)
+        if err is not None or getattr(f, "cancelled", False):
+            # typed terminal failure: no latency/goodput sample
+            rep.failed += 1
+            kind = type(err).__name__ if err is not None else "Cancelled"
+            rep.errors_by_type[kind] = rep.errors_by_type.get(kind, 0) + 1
+            if kind in ("RequestShed", "Cancelled"):
+                rep.shed += 1
+            continue
         rep.completed += 1
         rep.tokens_out += len(f.tokens)
+        if getattr(f, "degraded", False):
+            rep.degraded += 1
         lat_ms = (f.finish_time - f.submit_time) * 1e3 \
             if f.finish_time is not None else float("nan")
         rep.latencies_ms.append(lat_ms)

@@ -62,6 +62,7 @@ from repro.core.switching import (FusedLRU, SwitchEngine, Tenant,
 from repro.kernels.ops import sidedelta_table
 from repro.models import lm
 from repro.models.layers import sidedelta_weight
+from repro.runtime import faults
 
 BASE = None            # the "no adapter" tenant in a names list
 _BASE_SLOT = "__base__"
@@ -385,6 +386,10 @@ class MultiTenantEngine:
         sync rebuild and the async build produce identical tables from
         identical inputs. Returns (slots, tables, meta)."""
         from repro.kernels.ops import quantize_table
+        # injected device-OOM point: covers the sync rebuild AND the async
+        # build worker (poll_async_build contains worker failures; the hub
+        # engines back off and retry on TableBuildError from sync builds)
+        faults.on_table_build()
         order = sorted(side, key=lambda t: t if isinstance(t, str)
                        else tenant_key(t))
         slots = {name: i for i, name in enumerate(order)}

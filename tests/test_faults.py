@@ -1,0 +1,528 @@
+"""Serving fault tolerance: injection, degradation ladder, shedding.
+
+Acceptance bars pinned here:
+  * The fault injector is deterministic (stateless hash draws) and a
+    no-op when uninstalled — the disabled NaN-guard/injector decode path
+    produces the same tokens as the fast path.
+  * Store loads retry with backoff, then quarantine: persistent failures
+    fail fast with ``AdapterUnavailable`` until ``clear_quarantine``;
+    a REAL corrupt pack on disk walks the same ladder (crc32 ->
+    ``PackFormatError`` -> retries -> ``StoreError`` + quarantine).
+  * A dead prefetch worker surfaces as a typed ``StoreError`` from
+    ``PrefetchHandle.result()`` AND releases the eviction pin.
+  * ``AdapterStore.shutdown(wait=False)`` drains deterministically and
+    is idempotent.
+  * The engines' degradation ladder: quarantined ``name@v`` falls back
+    to ``name@v-1``, unversioned adapters fall to base, ``fallback=
+    "none"`` fails typed — degraded requests are flagged, with token
+    parity against serving the fallback directly.
+  * Admission robustness: bounded queue sheds at submit, queue deadlines
+    shed in ``step()`` — both typed ``RequestShed``, never silent.
+  * A poisoned slot (NaN logits) fails only its own request; survivors
+    keep token parity. ``SimulatedPreemption`` mid-run -> rebuild ->
+    resubmit reproduces the fault-free tokens (crash recovery).
+"""
+import hashlib
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutTimeoutError
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.adapters import AdapterPack
+from repro.core.switching import prior_version
+from repro.hub import AdapterStore, ServingEngine
+from repro.models import layers, lm
+from repro.runtime import faults
+from repro.runtime.faults import (AdapterUnavailable, EngineWatchdog,
+                                  FaultPlan, RequestShed, SlotPoisoned,
+                                  StoreError)
+from repro.runtime.ft import SimulatedPreemption
+
+from test_hub import make_model_packs, synth_pack
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_injector():
+    """Every test leaves the global switchboard clean."""
+    yield
+    faults.uninstall()
+
+
+def draw(seed, site, key, n):
+    """The injector's stateless draw, replicated so tests can *search*
+    for a seed with a wanted fail/succeed pattern instead of flaking."""
+    digest = hashlib.sha256(f"{seed}:{site}:{key}:{n}".encode()).digest()
+    return int.from_bytes(digest[:4], "big") / 2.0 ** 32
+
+
+def find_seed(site, key, pattern, p):
+    """Smallest seed whose first len(pattern) draws fail (True) exactly
+    per ``pattern`` at probability ``p``."""
+    for seed in range(10_000):
+        if all((draw(seed, site, key, i) < p) == want
+               for i, want in enumerate(pattern)):
+            return seed
+    raise AssertionError("no seed found — widen the search")
+
+
+def cold_store(tmp_path, n=3, **kw):
+    store = AdapterStore(str(tmp_path / "store"), **kw)
+    for i in range(n):
+        store.add(synth_pack(name=f"t{i}", seed=i))
+        store.evict(f"t{i}")
+    return store
+
+
+# ---------------------------------------------------------------------------
+# Injector determinism + disabled cost
+# ---------------------------------------------------------------------------
+
+def test_injector_draws_are_deterministic():
+    plan = FaultPlan(seed=3, disk_fail_p=0.5, corrupt_p=1.0)
+    a, b = faults.FaultInjector(plan), faults.FaultInjector(plan)
+    seq_a = [a._draw("disk", "t0") for _ in range(8)]
+    seq_b = [b._draw("disk", "t0") for _ in range(8)]
+    assert seq_a == seq_b                      # thread-schedule independent
+    assert len(set(seq_a)) > 1                 # retries get fresh draws
+    # attempts must be decorrelated: a failing first draw cannot force
+    # every retry to fail too (p=0.5 would deadlock the retry rung)
+    assert any(x < 0.5 for x in seq_a) and any(x >= 0.5 for x in seq_a)
+    payload = b"0123456789" * 20
+    ca = a.corrupt_payload("/x/p.shpk", payload)
+    cb = b.corrupt_payload("/x/p.shpk", payload)
+    assert ca == cb and ca != payload
+    assert sum(x != y for x, y in zip(ca, payload)) == 1   # one byte flipped
+
+
+def test_uninstalled_hooks_are_noops():
+    assert not faults.enabled() and faults.active() is None
+    payload = b"abc"
+    assert faults.corrupt_payload("/p", payload) is payload
+    assert faults.poison_logits(123) is None
+    faults.on_disk_read("t0")
+    faults.on_worker("t0")
+    faults.on_table_build()
+    faults.on_engine_step(99)
+
+
+def test_poison_and_preempt_fire_once_at_first_reachable_step():
+    inj = faults.FaultInjector(FaultPlan(poison_step=5, poison_slot=2,
+                                         preempt_step=7))
+    assert inj.poison_logits(4) is None
+    assert inj.poison_logits(6) == 2           # >= threshold, not exact
+    assert inj.poison_logits(7) is None        # once only
+    inj.on_engine_step(6)
+    with pytest.raises(SimulatedPreemption):
+        inj.on_engine_step(9)
+    inj.on_engine_step(10)                     # a rebuilt engine survives
+    assert inj.counts == {"poison": 1, "preempt": 1}
+
+
+# ---------------------------------------------------------------------------
+# Store: retry -> quarantine ladder
+# ---------------------------------------------------------------------------
+
+def test_load_retry_then_success(tmp_path):
+    store = cold_store(tmp_path, load_retries=2, retry_backoff_s=0.001)
+    seed = find_seed("disk", "t0", (True, False), p=0.5)
+    inj = faults.install(FaultPlan(seed=seed, disk_fail_p=0.5))
+    pack = store.get("t0")
+    assert pack.name == "t0"
+    assert store.retries == 1
+    assert inj.counts["disk_fail"] == 1
+    assert store.quarantined() == []
+
+
+def test_persistent_failure_quarantines_then_fail_fast(tmp_path):
+    store = cold_store(tmp_path, load_retries=1, retry_backoff_s=0.001)
+    inj = faults.install(FaultPlan(seed=0, disk_fail_p=1.0))
+    with pytest.raises(StoreError, match="t0"):
+        store.get("t0")
+    assert inj.counts["disk_fail"] == 2        # initial + 1 retry
+    assert store.load_failures == 1
+    assert store.quarantined() == ["t0"]
+    # fail-fast: no further disk attempts while quarantined
+    with pytest.raises(AdapterUnavailable, match="quarantined"):
+        store.get("t0")
+    with pytest.raises(AdapterUnavailable):
+        store.prefetch("t0")
+    assert inj.counts["disk_fail"] == 2
+    faults.uninstall()
+    assert store.clear_quarantine("t0")
+    assert not store.clear_quarantine("t0")    # second clear: nothing to do
+    assert store.get("t0").name == "t0"
+
+
+def test_corrupt_pack_on_disk_quarantines(tmp_path):
+    """A REAL flipped payload byte (no injector): crc32 rejects it as
+    PackFormatError, the retry ladder exhausts, the pack quarantines."""
+    store = cold_store(tmp_path, n=2, load_retries=1,
+                       retry_backoff_s=0.001)
+    path = store._paths["t0"]
+    good = open(path, "rb").read()
+    raw = bytearray(good)
+    raw[-1] ^= 0xFF                            # payload tail: crc32 territory
+    open(path, "wb").write(bytes(raw))
+    with pytest.raises(StoreError, match="t0"):
+        store.get("t0")
+    assert store.quarantined() == ["t0"]
+    assert store.get("t1").name == "t1"        # siblings unaffected
+    # repair + clear: the pack serves again
+    open(path, "wb").write(good)
+    store.clear_quarantine("t0")
+    assert store.get("t0").name == "t0"
+
+
+def test_injected_corruption_walks_the_real_crc_path(tmp_path):
+    """corrupt_payload flips bytes BEFORE the crc check, so the injected
+    fault exercises the production rejection path, not a simulated one."""
+    store = cold_store(tmp_path, n=1, load_retries=0)
+    faults.install(FaultPlan(seed=0, corrupt_p=1.0))
+    with pytest.raises(StoreError):
+        store.get("t0")
+    assert store.quarantined() == ["t0"]
+
+
+# ---------------------------------------------------------------------------
+# Prefetch worker death + pin release (the eviction-unblocked contract)
+# ---------------------------------------------------------------------------
+
+def test_worker_death_is_typed_and_releases_pin(tmp_path):
+    store = cold_store(tmp_path)
+    faults.install(FaultPlan(seed=0, worker_death_p=1.0))
+    h = store.prefetch("t0")
+    with pytest.raises(StoreError, match="t0"):
+        h.result()
+    # the pin died with the handle: eviction is unblocked
+    assert store.inflight_names() == []
+    faults.uninstall()
+    assert store.get("t0").name == "t0"        # recoverable after the fault
+    assert store.evict("t0")                   # and evictable
+
+
+def wedge_pool(store, gate):
+    """Pre-create the store's (single) worker pool with a job parked on
+    ``gate``, so every prefetch submitted after this queues behind it."""
+    with store._lock:
+        store._pool = ThreadPoolExecutor(max_workers=1,
+                                         thread_name_prefix="shira-store")
+    store._pool.submit(gate.wait)
+
+
+def test_prefetch_result_timeout_keeps_handle_alive(tmp_path):
+    store = cold_store(tmp_path, workers=1)
+    gate = threading.Event()
+    wedge_pool(store, gate)                    # wedge the single worker
+    h = store.prefetch("t0")
+    with pytest.raises(FutTimeoutError):
+        h.result(timeout=0.05)
+    assert "t0" in store.inflight_names()      # pin survives a timeout
+    gate.set()
+    assert h.result(timeout=20.0).name == "t0"
+    assert store.inflight_names() == []
+
+
+# ---------------------------------------------------------------------------
+# Store shutdown: deterministic, idempotent
+# ---------------------------------------------------------------------------
+
+def test_shutdown_no_wait_cancels_and_is_idempotent(tmp_path):
+    store = cold_store(tmp_path, n=3, workers=1)
+    gate = threading.Event()
+    wedge_pool(store, gate)                    # wedge: queued jobs cancelable
+    hs = [store.prefetch(f"t{i}") for i in range(3)]
+    store.shutdown(wait=False)
+    gate.set()
+    store.shutdown(wait=False)                 # idempotent
+    store.shutdown()                           # and mixed-mode safe
+    # every handle still settles deterministically: a cancelled job falls
+    # back to a synchronous load, nothing blocks forever
+    for i, h in enumerate(hs):
+        assert h.result(timeout=20.0).name == f"t{i}"
+    assert store.inflight_names() == []
+    assert store._inflight_bytes == 0
+    # post-shutdown prefetch degrades to sync-on-result, never respawns
+    h = store.prefetch("t0")
+    assert h.result().name == "t0"
+    assert store._pool is None
+
+
+# ---------------------------------------------------------------------------
+# Engine: admission shedding, typed futures, degradation ladder
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    with layers.compute_precision(jnp.float32):
+        cfg = get_smoke_config("starcoder2-7b")
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        packs = make_model_packs(cfg, params, 3)
+        yield cfg, params, packs
+
+
+def store_of(tmp_path, packs, **kw):
+    store = AdapterStore(str(tmp_path / "store"), **kw)
+    for p in packs:
+        store.add(p, values="f32")
+    return store
+
+
+def prompt_of(cfg, n=6, seed=5):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (n,),
+                                         0, cfg.vocab_size))
+
+
+def test_serve_future_timeout_and_typed_result(engine_setup, tmp_path):
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = engine_setup
+        se = ServingEngine(cfg, params, slots=2, cache_size=24,
+                           store=store_of(tmp_path, packs))
+        fut = se.submit(prompt_of(cfg), "a0", max_tokens=2)
+        t0 = time.monotonic()
+        with pytest.raises(RuntimeError, match="in flight"):
+            fut.result(timeout=0.05)           # bounded wait, no engine
+        assert time.monotonic() - t0 < 5.0
+        se.run()
+        assert len(fut.result(timeout=1.0)) == 2
+        se.shutdown(include_store=True)
+
+
+def test_bounded_queue_sheds_typed(engine_setup, tmp_path):
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = engine_setup
+        se = ServingEngine(cfg, params, slots=1, cache_size=24,
+                           store=store_of(tmp_path, packs), max_queue=2)
+        futs = [se.submit(prompt_of(cfg), "a0", max_tokens=2)
+                for _ in range(3)]
+        # admission drains only at step(): the queue holds both early
+        # submits, the third is shed at the door
+        assert futs[2].done() and isinstance(futs[2].error, RequestShed)
+        assert futs[2].error.reason == "queue_full"
+        with pytest.raises(RequestShed):
+            futs[2].result()
+        assert se.shed == 1
+        se.run()
+        for f in futs[:2]:
+            assert len(f.result()) == 2        # backpressure, not loss
+        assert se.health()["shed"] == 1
+        se.shutdown(include_store=True)
+
+
+def test_queue_deadline_sheds_typed(engine_setup, tmp_path):
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = engine_setup
+        se = ServingEngine(cfg, params, slots=1, cache_size=24,
+                           store=store_of(tmp_path, packs))
+        keep = se.submit(prompt_of(cfg), "a0", max_tokens=2)
+        doomed = se.submit(prompt_of(cfg), "a1", max_tokens=2,
+                           deadline_s=1e-6)
+        time.sleep(0.01)                       # let the deadline lapse
+        se.run()
+        assert len(keep.result()) == 2
+        assert isinstance(doomed.error, RequestShed)
+        assert doomed.error.reason == "deadline"
+        with pytest.raises(RequestShed, match="deadline"):
+            doomed.result()
+        assert se.shed == 1
+        se.shutdown(include_store=True)
+
+
+def test_fallback_to_previous_version(engine_setup, tmp_path):
+    """name@v quarantined -> the ladder serves name@v-1, flagged."""
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = engine_setup
+        store = AdapterStore(str(tmp_path / "store"))
+        v1 = store.publish(AdapterPack("p", packs[0].entries,
+                                       packs[0].alpha))
+        v2 = store.publish(AdapterPack("p", packs[1].entries,
+                                       packs[1].alpha))
+        assert (v1, v2) == ("p@1", "p@2")
+        assert prior_version(v2) == v1
+        se = ServingEngine(cfg, params, slots=2, cache_size=24, store=store)
+        toks = prompt_of(cfg)
+        want = se.submit(toks, v1, max_tokens=3)
+        se.run()
+        store.quarantine(v2, reason="test")
+        got = se.submit(toks, "p", max_tokens=3)   # resolves to p@2 -> fails
+        se.run()
+        assert got.degraded and got.degraded_from == "p"
+        np.testing.assert_array_equal(got.result(), want.result())
+        assert se.degraded == 1
+        se.shutdown(include_store=True)
+
+
+def test_fallback_to_base_and_none_policy(engine_setup, tmp_path):
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = engine_setup
+        store = store_of(tmp_path, packs)
+        se = ServingEngine(cfg, params, slots=2, cache_size=24, store=store)
+        toks = prompt_of(cfg)
+        base = se.submit(toks, None, max_tokens=3)
+        se.run()
+        store.quarantine("a0", reason="test")  # unversioned: no prior rung
+        got = se.submit(toks, "a0", max_tokens=3)
+        se.run()
+        assert got.degraded
+        np.testing.assert_array_equal(got.result(), base.result())
+        se.shutdown()
+
+        strict = ServingEngine(cfg, params, slots=2, cache_size=24,
+                               store=store, fallback="none")
+        failed = strict.submit(toks, "a0", max_tokens=3)
+        assert failed.done() and isinstance(failed.error, AdapterUnavailable)
+        with pytest.raises(AdapterUnavailable):
+            failed.result()
+        assert strict.failed == 1
+        strict.shutdown(include_store=True)
+
+
+def test_nan_guard_token_parity_when_disabled_path_differs(engine_setup,
+                                                           tmp_path):
+    """nan_guard=True (host argmax) must reproduce the fast jnp.argmax
+    path token-for-token when nothing is poisoned."""
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = engine_setup
+        toks = prompt_of(cfg)
+        outs = []
+        for guard in (False, True):
+            se = ServingEngine(cfg, params, slots=2, cache_size=24,
+                               store=store_of(tmp_path / str(guard), packs),
+                               nan_guard=guard)
+            futs = [se.submit(toks, a, max_tokens=4)
+                    for a in ("a0", None)]
+            se.run()
+            outs.append([f.result() for f in futs])
+            se.shutdown(include_store=True)
+        for a, b in zip(*outs):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_poisoned_slot_isolated_survivors_keep_parity(engine_setup,
+                                                      tmp_path):
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = engine_setup
+        se = ServingEngine(cfg, params, slots=2, cache_size=24,
+                           store=store_of(tmp_path, packs), nan_guard=True)
+        toks = prompt_of(cfg)
+        # fault-free reference
+        ref = [se.submit(toks, a, max_tokens=6) for a in ("a0", "a1")]
+        se.run()
+        want = [f.result() for f in ref]
+        inj = faults.install(FaultPlan(poison_step=se.step_count + 2,
+                                       poison_slot=0))
+        victim = se.submit(toks, "a0", max_tokens=6)
+        other = se.submit(toks, "a1", max_tokens=6)
+        se.run()
+        faults.uninstall()
+        assert inj.counts["poison"] == 1
+        assert isinstance(victim.error, SlotPoisoned)
+        with pytest.raises(SlotPoisoned):
+            victim.result()
+        # the survivor never saw the poison: token parity with fault-free
+        np.testing.assert_array_equal(other.result(), want[1])
+        assert se.poisoned == 1 and se.health()["poisoned"] == 1
+        # the slot is reusable after quarantine
+        again = se.submit(toks, "a0", max_tokens=6)
+        se.run()
+        np.testing.assert_array_equal(again.result(), want[0])
+        se.shutdown(include_store=True)
+
+
+def test_table_build_failure_backs_off_and_retries(engine_setup, tmp_path):
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = engine_setup
+        toks = prompt_of(cfg)
+        se = ServingEngine(cfg, params, slots=2, cache_size=24,
+                           store=store_of(tmp_path / "ref", packs))
+        ref = se.submit(toks, "a0", max_tokens=3)
+        se.run()
+        se.shutdown(include_store=True)
+
+        seed = find_seed("build", "tables", (True, False), p=0.5)
+        se = ServingEngine(cfg, params, slots=2, cache_size=24,
+                           store=store_of(tmp_path / "inj", packs))
+        inj = faults.install(FaultPlan(seed=seed, build_fail_p=0.5))
+        fut = se.submit(toks, "a0", max_tokens=3)
+        se.run()
+        faults.uninstall()
+        assert inj.counts["build_fail"] >= 1   # a build DID fail...
+        np.testing.assert_array_equal(fut.result(), ref.result())
+        se.shutdown(include_store=True)
+
+
+def test_crash_recovery_preempt_rebuild_resubmit(engine_setup, tmp_path):
+    """SimulatedPreemption kills the loop mid-decode; a rebuilt engine
+    over the same store replays the requests to identical tokens."""
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = engine_setup
+        store = store_of(tmp_path, packs)
+        toks = prompt_of(cfg)
+        spec = [("a0", 4), ("a1", 3), (None, 2)]
+
+        se = ServingEngine(cfg, params, slots=2, cache_size=24, store=store)
+        ref = [se.submit(toks, a, max_tokens=n) for a, n in spec]
+        se.run()
+        want = [f.result() for f in ref]
+        se.shutdown()
+
+        se = ServingEngine(cfg, params, slots=2, cache_size=24, store=store)
+        futs = [se.submit(toks, a, max_tokens=n) for a, n in spec]
+        faults.install(FaultPlan(preempt_step=se.step_count + 2))
+        with pytest.raises(SimulatedPreemption):
+            se.run()
+        faults.uninstall()
+        assert any(not f.done() for f in futs)    # it really died mid-work
+        se.shutdown()
+
+        rebuilt = ServingEngine(cfg, params, slots=2, cache_size=24,
+                                store=store)
+        futs = [rebuilt.submit(toks, a, max_tokens=n) for a, n in spec]
+        rebuilt.run()
+        for f, w in zip(futs, want):
+            np.testing.assert_array_equal(f.result(), w)
+        rebuilt.shutdown(include_store=True)
+
+
+# ---------------------------------------------------------------------------
+# Watchdog / health
+# ---------------------------------------------------------------------------
+
+def test_watchdog_ewma_and_stall():
+    now = [100.0]
+    wd = EngineWatchdog(alpha=0.5, stall_ratio=10.0, min_stall_s=0.5,
+                        clock=lambda: now[0])
+    assert not wd.stalled()                    # no steps yet: never stalled
+    wd.record(0.010)
+    wd.record(0.030)
+    assert wd.ewma_s == pytest.approx(0.020)
+    assert not wd.stalled()                    # gap 0 < floor
+    now[0] += 0.3
+    assert not wd.stalled()                    # 0.3 < max(0.2, 0.5) floor
+    now[0] += 0.4
+    assert wd.stalled()                        # 0.7 > 0.5
+    snap = wd.snapshot()
+    assert snap["steps"] == 2 and snap["stalled"]
+    assert snap["since_last_step_s"] == pytest.approx(0.7)
+
+
+def test_engine_health_snapshot(engine_setup, tmp_path):
+    with layers.compute_precision(jnp.float32):
+        cfg, params, packs = engine_setup
+        se = ServingEngine(cfg, params, slots=2, cache_size=24,
+                           store=store_of(tmp_path, packs))
+        se.submit(prompt_of(cfg), "a0", max_tokens=2)
+        se.run()
+        h = se.health()
+        assert h["watchdog"]["steps"] == se.step_count > 0
+        assert h["watchdog"]["ewma_step_s"] > 0
+        assert not h["watchdog"]["stalled"]
+        assert h["queued"] == 0 and h["active"] == 0
+        assert h["quarantined"] == []
+        assert h["tokens_out"] == 2
+        se.shutdown(include_store=True)
